@@ -1,0 +1,59 @@
+"""Paper Fig. 3: average Frobenius-norm difference between compressed
+and original layer weights vs rank, at CR=50% — the rank 0 -> 1 cliff
+that justifies the rank-1 design choice. Pure matrix-level study."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scores
+from repro.core.slab import SLaBConfig, slab_decompose, reconstruct
+from benchmarks.common import emit, trained_model
+from repro.data import calibration_batch
+from repro.models import lm
+from repro.models.common import positions_for
+
+RANKS = [0, 1, 2, 4, 8, 16]
+
+
+def run():
+    cfg, params = trained_model()
+    # activation norms from one calibration forward (first layer inputs)
+    cal = jnp.asarray(calibration_batch(cfg.vocab, n_seq=8, seq_len=64))
+    h = lm.embed_inputs(cfg, params, cal)
+    an = scores.act_col_norms(h)
+
+    # all attention + mlp weights of layer 0 (paper: averaged over layers)
+    lp = jax.tree.map(lambda a: a[0], params["layers"])
+    mats = [lp["attn"]["wq"].T, lp["attn"]["wo"].T, lp["mlp"]["w_gate"].T,
+            lp["mlp"]["w_down"].T]
+    rows = []
+    for r in RANKS:
+        diffs = []
+        for w in mats:
+            w = w.astype(jnp.float32)
+            a = an if w.shape[1] == an.shape[0] else None
+            scfg = SLaBConfig(cr=0.5, iters=4, rank=max(r, 1),
+                              include_lowrank=r > 0,
+                              include_binary=r > 0)
+            dec = slab_decompose(w, a, scfg)
+            diffs.append(float(jnp.linalg.norm(
+                w - reconstruct(dec)) / jnp.linalg.norm(w)))
+        rows.append({"rank": r, "rel_fro_diff": float(np.mean(diffs))})
+        print(rows[-1], flush=True)
+    emit("fig3", rows)
+    return rows
+
+
+def check(rows) -> bool:
+    """The cliff: rank 0 -> 1 is a big drop; 1 -> max is much smaller."""
+    by = {r["rank"]: r["rel_fro_diff"] for r in rows}
+    cliff = by[0] - by[1]
+    tail = by[1] - by[max(by)]
+    return cliff > 0 and (tail <= 0 or cliff > 2 * tail)
+
+
+if __name__ == "__main__":
+    rows = run()
+    print("fig3 cliff check:", "PASS" if check(rows) else "FAIL")

@@ -1,0 +1,55 @@
+"""Paper Table I: ppl + accuracy for Dense / SparseGPT / Wanda / SLaB at
+CR in {50, 60, 70, 80}% unstructured and {2:4, 4:8} at 50%.
+
+(+ magnitude as an extra floor baseline the paper cites via Wanda.)
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import compress_and_eval, emit, evaluate, trained_model
+
+
+def run(fast: bool = False):
+    cfg, params = trained_model()
+    rows = [{"method": "dense", "sparsity": "0%", **evaluate(cfg, params)}]
+    crs = [0.5] if fast else [0.5, 0.6, 0.7, 0.8]
+    patterns = [("2:4", 0.5)] if fast else [("4:8", 0.5), ("2:4", 0.5)]
+    methods = ["sparsegpt", "wanda", "slab", "magnitude"]
+    for cr in crs:
+        for m in methods:
+            r = compress_and_eval(m, cr, None)
+            rows.append({"method": m, "sparsity": f"US({int(cr*100)}%)",
+                         **r})
+            print(rows[-1], flush=True)
+    for pat, cr in patterns:
+        for m in methods:
+            r = compress_and_eval(m, cr, pat)
+            rows.append({"method": m, "sparsity": f"{pat}({int(cr*100)}%)",
+                         **r})
+            print(rows[-1], flush=True)
+    emit("table1", rows)
+    return rows
+
+
+def check(rows) -> bool:
+    """Paper-claim direction checks: SLaB beats both baselines at every
+    CR/pattern cell, and degrades gracefully at high CR."""
+    by = {(r["method"], r["sparsity"]): r for r in rows}
+    ok = True
+    for s in {r["sparsity"] for r in rows if r["method"] == "slab"}:
+        slab = by[("slab", s)]["ppl"]
+        for base in ("wanda", "sparsegpt", "magnitude"):
+            if (base, s) in by and slab > by[(base, s)]["ppl"]:
+                ok = False
+                print(f"  !! slab ppl {slab:.2f} > {base} "
+                      f"{by[(base, s)]['ppl']:.2f} at {s}")
+    return ok
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    rows = run(fast=args.fast)
+    print("claim-direction check:", "PASS" if check(rows) else "FAIL")

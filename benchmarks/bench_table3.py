@@ -1,0 +1,49 @@
+"""Paper Table III: component ablation at 2:4 (CR=50%):
+  W_S only | W_S + W_L(r=16) | W_S + factor⊙W_B | W_S + W_L⊙W_B (SLaB).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.pipeline import compress_model
+from repro.core.slab import SLaBConfig
+from repro.data import calibration_batch
+
+from benchmarks.common import emit, evaluate, trained_model
+
+VARIANTS = [
+    ("W_S", SLaBConfig(cr=0.5, pattern="2:4", iters=4,
+                       include_binary=False, include_lowrank=False)),
+    ("W_S + W_L(r=16)", SLaBConfig(cr=0.5, pattern="2:4", iters=4,
+                                   include_binary=False, rank=16)),
+    ("W_S + factor*W_B", SLaBConfig(cr=0.5, pattern="2:4", iters=4,
+                                    factor_mode=True)),
+    ("W_S + W_L*W_B", SLaBConfig(cr=0.5, pattern="2:4", iters=4)),
+]
+
+
+def run():
+    cfg, params = trained_model()
+    cal = calibration_batch(cfg.vocab, n_seq=16, seq_len=128)
+    rows = []
+    for name, scfg in VARIANTS:
+        t0 = time.monotonic()
+        new, _ = compress_model(cfg, params, cal, method="slab", scfg=scfg)
+        r = evaluate(cfg, new)
+        rows.append({"variant": name, **r,
+                     "compress_s": time.monotonic() - t0})
+        print(rows[-1], flush=True)
+    emit("table3", rows)
+    return rows
+
+
+def check(rows) -> bool:
+    """Paper's ablation ordering: full SLaB >= factor-mode > W_S-only."""
+    by = {r["variant"]: r for r in rows}
+    return (by["W_S + W_L*W_B"]["ppl"] <= by["W_S"]["ppl"] and
+            by["W_S + factor*W_B"]["ppl"] <= by["W_S"]["ppl"])
+
+
+if __name__ == "__main__":
+    rows = run()
+    print("ablation-ordering check:", "PASS" if check(rows) else "FAIL")

@@ -1,0 +1,92 @@
+"""Shared benchmark harness: train one small LM once (cached), compress
+with every method, evaluate ppl + zero-shot-style accuracy.
+
+The paper evaluates HF Llama checkpoints on WikiText-2/LM-Eval. Offline
+here: we train a small llama-geometry model on the synthetic corpus to
+convergence-ish, and use (a) held-out perplexity as the ppl metric and
+(b) next-token top-1 accuracy as the zero-shot-accuracy stand-in. The
+COMPARISONS (SLaB vs Wanda vs SparseGPT vs magnitude at matched CR /
+pattern) are what reproduce the paper's tables; absolute values differ
+from the paper's (different model+data) and are labeled as such.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core.pipeline import compress_model
+from repro.core.slab import SLaBConfig
+from repro.data import SyntheticCorpus, calibration_batch
+from repro.models import lm
+from repro.models.common import softmax_xent
+
+CACHE = os.path.join(os.path.dirname(__file__), "_cache")
+ARCH = "llama2_7b"          # the paper's main model geometry (reduced)
+TRAIN_STEPS = 300
+EVAL_BATCHES = 8
+EVAL_B, EVAL_S = 16, 128
+
+
+@functools.lru_cache(maxsize=1)
+def trained_model() -> Tuple[object, dict]:
+    """Train (or load cached) the small paper-geometry LM."""
+    from repro.checkpoint.manager import load_pytree, save_pytree
+    cfg = configs.get(ARCH, smoke=True).with_(dtype=jnp.float32)
+    ck = os.path.join(CACHE, "llama2_7b_smoke_trained")
+    template = jax.eval_shape(
+        lambda: lm.init(cfg, jax.random.PRNGKey(0))[0])
+    if os.path.isdir(ck):
+        params = load_pytree(template, ck)
+        return cfg, params
+    from repro.launch.train import train
+    state, _ = train(ARCH, smoke=True, steps=TRAIN_STEPS, batch=32,
+                     seq=128, ckpt_dir=None, lr=3e-3, log_every=50,
+                     microbatches=1)
+    params = jax.tree.map(lambda x: x.astype(jnp.float32),
+                          state["params"])
+    os.makedirs(CACHE, exist_ok=True)
+    save_pytree(params, ck)
+    return cfg, params
+
+
+def evaluate(cfg, params) -> Dict[str, float]:
+    """Held-out ppl + next-token accuracy."""
+    corpus = SyntheticCorpus(cfg.vocab, seed=0)
+    tot_nll, tot_acc, n = 0.0, 0.0, 0
+    for batch in corpus.eval_batches(EVAL_BATCHES, EVAL_B, EVAL_S):
+        x, y = jnp.asarray(batch["inputs"]), jnp.asarray(batch["labels"])
+        logits, _ = lm.forward(cfg, params, x)
+        tot_nll += float(softmax_xent(logits, y))
+        tot_acc += float(jnp.mean(jnp.argmax(logits, -1) == y))
+        n += 1
+    return {"ppl": float(np.exp(tot_nll / n)), "acc": 100 * tot_acc / n}
+
+
+def compress_and_eval(method: str, cr: float, pattern: Optional[str],
+                      iters: int = 8,
+                      group=(1, 0)) -> Dict[str, float]:
+    jax.clear_caches()      # each variant compiles fresh shapes; don't
+    cfg, params = trained_model()   # accumulate executables across a sweep
+    cal = calibration_batch(cfg.vocab, n_seq=16, seq_len=128)
+    t0 = time.monotonic()
+    scfg = SLaBConfig(cr=cr, pattern=pattern, iters=iters, group=group)
+    new, _ = compress_model(cfg, params, cal, method=method, scfg=scfg)
+    out = evaluate(cfg, new)
+    out["compress_s"] = time.monotonic() - t0
+    return out
+
+
+def emit(table: str, rows) -> None:
+    os.makedirs("experiments/benchmarks", exist_ok=True)
+    path = f"experiments/benchmarks/{table}.json"
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"[{table}] -> {path}")

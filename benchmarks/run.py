@@ -1,0 +1,81 @@
+"""Benchmark aggregator: one entry per paper table/figure + kernels +
+the roofline summary. ``python -m benchmarks.run [--fast]``.
+
+Each job runs in its own subprocess: ~30 jit-compiled compress+eval
+variants per table would otherwise accumulate compile caches past this
+container's RAM.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+JOBS = ["table1", "table2", "table3", "fig1", "fig3", "kernels"]
+
+
+def run_inline(name: str, fast: bool) -> bool:
+    from benchmarks import (bench_fig1, bench_fig3, bench_kernels,
+                            bench_table1, bench_table2, bench_table3)
+    jobs = {
+        "table1": lambda: bench_table1.check(bench_table1.run(fast)),
+        "table2": lambda: bench_table2.check(bench_table2.run(fast)),
+        "table3": lambda: bench_table3.check(bench_table3.run()),
+        "fig1": lambda: bench_fig1.check(bench_fig1.run()),
+        "fig3": lambda: bench_fig3.check(bench_fig3.run()),
+        "kernels": lambda: (bench_kernels.run(), True)[1],
+    }
+    return bool(jobs[name]())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced sweeps (CI-sized)")
+    ap.add_argument("--only", type=str, default=None)
+    ap.add_argument("--inline", type=str, default=None,
+                    help="(internal) run one job in-process")
+    args = ap.parse_args()
+
+    if args.inline:
+        ok = run_inline(args.inline, args.fast)
+        sys.exit(0 if ok else 1)
+
+    names = [args.only] if args.only else JOBS
+    results = {}
+    for name in names:
+        t0 = time.monotonic()
+        print(f"=== {name} ===", flush=True)
+        cmd = [sys.executable, "-m", "benchmarks.run", "--inline", name]
+        if args.fast:
+            cmd.append("--fast")
+        env = dict(os.environ)
+        env.setdefault("PYTHONPATH", "src")
+        proc = subprocess.run(cmd, env=env)
+        ok = proc.returncode == 0
+        results[name] = (ok, time.monotonic() - t0)
+        print(f"=== {name}: {'PASS' if ok else 'FAIL'} "
+              f"({results[name][1]:.1f}s) ===", flush=True)
+
+    # roofline summary if dry-run artifacts exist
+    for d in ("experiments/dryrun_final", "experiments/dryrun",
+              "experiments/dryrun_baseline"):
+        if os.path.isdir(d):
+            from repro.launch import roofline
+            rows = roofline.load_rows(d)
+            if rows:
+                print(f"\n=== roofline ({d}) ===")
+                print(roofline.fmt_table(rows))
+            break
+
+    print("\nname,ok,seconds")
+    for name, (ok, dt) in results.items():
+        print(f"{name},{int(bool(ok))},{dt:.1f}")
+    if not all(ok for ok, _ in results.values()):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Config registry: the 10 assigned architectures (+ the paper's own
+Llama-2-7B geometry), each with FULL (assignment-exact) and SMOKE
+(reduced, CPU-runnable) variants, and the assigned input-shape sets.
+
+Shape semantics (assignment):
+  train_4k     seq 4096,  global_batch 256  -> lowers train_step
+  prefill_32k  seq 32768, global_batch 32   -> lowers prefill
+  decode_32k   seq 32768 (cache), batch 128 -> lowers serve_step
+  long_500k    seq 524288 (cache), batch 1  -> serve_step, SSM/hybrid only
+
+Skips (recorded in DESIGN.md):
+  - long_500k needs sub-quadratic attention -> only mamba2 / zamba2.
+  - hubert is encoder-only -> no decode shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List
+
+from repro.models.common import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+ARCH_IDS: List[str] = [
+    "stablelm_12b",
+    "mistral_nemo_12b",
+    "llama3_2_3b",
+    "nemotron_4_340b",
+    "hubert_xlarge",
+    "phi3_5_moe",
+    "deepseek_moe_16b",
+    "qwen2_vl_2b",
+    "mamba2_1_3b",
+    "zamba2_7b",
+]
+
+# the paper's own evaluation geometry (benchmarks only, not a dry-run cell)
+EXTRA_IDS = ["llama2_7b"]
+
+
+def normalize(arch_id: str) -> str:
+    return arch_id.replace("-", "_").replace(".", "_")
+
+
+def get(arch_id: str, smoke: bool = False) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{normalize(arch_id)}")
+    return mod.SMOKE if smoke else mod.FULL
+
+
+def shapes_for(cfg: ArchConfig) -> List[ShapeSpec]:
+    """Assignment applicability: which shape cells this arch runs."""
+    out = [SHAPES["train_4k"], SHAPES["prefill_32k"]]
+    if cfg.family == "audio":       # encoder-only: no decode
+        return out
+    out.append(SHAPES["decode_32k"])
+    if cfg.family in ("ssm", "hybrid"):   # sub-quadratic: long-context cell
+        out.append(SHAPES["long_500k"])
+    return out
+
+
+def all_cells() -> List[tuple]:
+    """Every (arch_id, shape) dry-run cell."""
+    cells = []
+    for a in ARCH_IDS:
+        cfg = get(a)
+        for s in shapes_for(cfg):
+            cells.append((a, s.name))
+    return cells

@@ -1,0 +1,19 @@
+"""DeepSeek-MoE-16B. [arXiv:2401.06066; hf]
+28L d_model=2048 16H (GQA kv=16, i.e. MHA) d_ff=1408/expert,
+64 routed experts top-6 + 2 shared experts (fine-grained), vocab=102400.
+Shared experts modeled as one always-on gated MLP of width 2*1408."""
+from repro.models.common import ArchConfig
+
+FULL = ArchConfig(
+    name="deepseek-moe-16b", family="moe",
+    n_layers=28, d_model=2048, n_heads=16, n_kv=16, d_head=128,
+    d_ff=1408, vocab=102400, act="swiglu", rope="rope",
+    n_experts=64, top_k=6, shared_ff=2816,
+)
+
+SMOKE = FULL.with_(
+    name="deepseek-moe-smoke",
+    n_layers=2, d_model=64, n_heads=4, n_kv=4, d_head=16,
+    d_ff=96, vocab=256, n_experts=8, top_k=3, shared_ff=192,
+    moe_group=64, q_chunk=64,
+)

@@ -1,0 +1,19 @@
+"""HuBERT-XLarge. [arXiv:2106.07447; unverified]
+48L d_model=1280 16H (kv=16, i.e. MHA) d_ff=5120 vocab=504.
+Encoder-only (non-causal); the conv waveform frontend is a STUB —
+input_specs provides precomputed frame embeddings (B, S, 1280).
+vocab=504 is the k-means unit inventory (masked-unit prediction)."""
+from repro.models.common import ArchConfig
+
+FULL = ArchConfig(
+    name="hubert-xlarge", family="audio",
+    n_layers=48, d_model=1280, n_heads=16, n_kv=16, d_head=80,
+    d_ff=5120, vocab=504, act="gelu", rope="none",
+    causal=False, input_mode="embeds",
+)
+
+SMOKE = FULL.with_(
+    name="hubert-xlarge-smoke",
+    n_layers=2, d_model=64, n_heads=4, n_kv=4, d_head=16,
+    d_ff=128, vocab=64, q_chunk=64,
+)

@@ -1,0 +1,20 @@
+"""Qwen2-VL-2B. [arXiv:2409.12191; hf]
+28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936, M-RoPE.
+Vision frontend (dynamic-resolution ViT) is a STUB — prefill consumes
+precomputed patch/text embeddings plus (t, h, w) M-RoPE position ids;
+decode consumes text token ids. Tied embeddings (2B-class config)."""
+from repro.models.common import ArchConfig
+
+FULL = ArchConfig(
+    name="qwen2-vl-2b", family="vlm",
+    n_layers=28, d_model=1536, n_heads=12, n_kv=2, d_head=128,
+    d_ff=8960, vocab=151936, act="swiglu", rope="mrope",
+    mrope_sections=(16, 24, 24), input_mode="embeds",
+    tie_embeddings=True,
+)
+
+SMOKE = FULL.with_(
+    name="qwen2-vl-smoke",
+    n_layers=2, d_model=64, n_heads=4, n_kv=2, d_head=16,
+    d_ff=128, vocab=256, mrope_sections=(2, 3, 3), q_chunk=64,
+)

@@ -1,0 +1,12 @@
+"""SLaB core: decomposition algorithm, baselines, packing, forward ops."""
+from repro.core.slab import (  # noqa: F401
+    SLaBConfig,
+    SLaBDecomposition,
+    compression_ratio,
+    compressed_bits,
+    decomposition_error,
+    keep_fraction,
+    reconstruct,
+    slab_decompose,
+)
+from repro.core.apply import slab_linear, slab_linear_packed, to_dense  # noqa: F401

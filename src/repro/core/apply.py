@@ -1,0 +1,69 @@
+"""Forward ops for SLaB-compressed linear layers (pure-jnp paths).
+
+The rank-1 Hadamard structure gives the cheap serving identity
+
+    x @ (u vᵀ ⊙ B)ᵀ = ((x ⊙ v) @ Bᵀ) ⊙ u
+
+so a compressed linear needs one sparse matmul + one binary matmul + two
+vector scalings. The Pallas kernels in ``repro.kernels`` implement the
+packed/tiled versions; these jnp forms are the oracles and the XLA
+fallback used by the serving path when kernels are disabled.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import ELLPacked, NMPacked, SLaBPacked, unpack_nm, unpack_sign_bits
+from repro.core.slab import SLaBDecomposition, low_rank_times_binary
+
+Array = jax.Array
+
+
+def slab_linear(x: Array, dec: SLaBDecomposition) -> Array:
+    """y = x @ (W_S + W_L ⊙ W_B)ᵀ for x (..., D_in).
+
+    Uses the rank-1 fast path when possible; general ranks and ablation
+    variants fall back to materializing W_L ⊙ W_B.
+    """
+    dt = x.dtype
+    w_s = dec.w_s.astype(dt)
+    y = x @ w_s.T
+    has_lr = dec.u is not None and dec.u.size
+    has_b = dec.w_b is not None and dec.w_b.size
+    if has_lr and has_b and dec.u.shape[-1] == 1:
+        u = dec.u[:, 0].astype(dt)
+        v = dec.v[:, 0].astype(dt)
+        y = y + ((x * v) @ dec.w_b.T.astype(dt)) * u
+    elif has_lr or has_b:
+        y = y + x @ low_rank_times_binary(dec).astype(dt).T
+    return y
+
+
+def slab_linear_packed(x: Array, p: SLaBPacked) -> Array:
+    """Forward from the packed (serving) format — jnp reference path that
+    unpacks on the fly; the Pallas kernel does the same tile-wise in VMEM."""
+    dt = x.dtype
+    if isinstance(p.sparse, NMPacked):
+        w_s = unpack_nm(p.sparse)
+    elif isinstance(p.sparse, ELLPacked):
+        from repro.core.packing import ell_unpack
+        w_s = ell_unpack(p.sparse)
+    else:
+        w_s = p.sparse
+    b = unpack_sign_bits(p.b_packed, p.d_in, dtype=dt)
+    y = x @ w_s.astype(dt).T
+    return y + ((x * p.v.astype(dt)) @ b.T) * p.u.astype(dt)
+
+
+class DenseEquivalent(NamedTuple):
+    w: Array
+
+
+def to_dense(dec: SLaBDecomposition, dtype=jnp.bfloat16) -> Array:
+    """Materialize Ŵ (used to swap compressed weights into existing model
+    params for evaluation; memory-equal but numerics-equal to slab_linear)."""
+    from repro.core.slab import reconstruct
+    return reconstruct(dec).astype(dtype)

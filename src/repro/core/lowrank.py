@@ -1,0 +1,105 @@
+"""Low-rank factorization primitives.
+
+SLaB only needs the rank-1 truncated SVD of the *non-negative* matrix
+|W - W_S| (Algorithm 1, line 6). By Perron-Frobenius the dominant singular
+pair of a non-negative matrix can be chosen entry-wise non-negative
+(paper Prop. 2), so power iteration started from a positive vector
+converges to it without sign ambiguity and without a cuSOLVER-style full
+SVD — the TPU/CPU-friendly choice.
+
+Rank-r (r > 1) is used only by the paper's ablations (Table III, Fig. 3);
+we provide subspace iteration for moderate r and exact lapack SVD for
+small matrices.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def power_rank1(y: Array, iters: int = 64) -> Tuple[Array, Array, Array]:
+    """Dominant singular triple (sigma, u, v) of ``y`` via power iteration.
+
+    Deterministic: starts from the normalized row-sum vector, which has a
+    non-zero component on the dominant pair for non-negative ``y``.
+    """
+    y = y.astype(jnp.float32)
+    v = jnp.sum(jnp.abs(y), axis=0)
+    v = v / jnp.maximum(jnp.linalg.norm(v), 1e-30)
+
+    def body(_, v):
+        u = y @ v
+        u = u / jnp.maximum(jnp.linalg.norm(u), 1e-30)
+        v = y.T @ u
+        return v / jnp.maximum(jnp.linalg.norm(v), 1e-30)
+
+    v = jax.lax.fori_loop(0, iters, body, v)
+    u = y @ v
+    sigma = jnp.linalg.norm(u)
+    u = u / jnp.maximum(sigma, 1e-30)
+    return sigma, u, v
+
+
+def subspace_svd(y: Array, r: int, iters: int = 24) -> Tuple[Array, Array, Array]:
+    """Top-r singular triples via randomized-free subspace (orthogonal)
+    iteration. Returns (sigmas (r,), U (Do, r), V (Di, r))."""
+    y = y.astype(jnp.float32)
+    d_out, d_in = y.shape
+    r = min(r, d_out, d_in)
+    # Deterministic start: first r columns of a DCT-like basis on row sums.
+    k = jnp.arange(d_in, dtype=jnp.float32)[:, None]
+    j = jnp.arange(r, dtype=jnp.float32)[None, :]
+    v0 = jnp.cos(jnp.pi * (k + 0.5) * j / d_in) * (1.0 + jnp.sum(jnp.abs(y), axis=0))[:, None]
+    q, _ = jnp.linalg.qr(v0)
+
+    def body(_, q):
+        z = y @ q
+        qz, _ = jnp.linalg.qr(z)
+        w = y.T @ qz
+        q2, _ = jnp.linalg.qr(w)
+        return q2
+
+    q = jax.lax.fori_loop(0, iters, body, q)
+    b = y @ q  # (Do, r)
+    # Small r x r SVD of the projected problem.
+    ub, s, vtb = jnp.linalg.svd(b, full_matrices=False)
+    u = ub[:, :r]
+    v = q @ vtb.T[:, :r]
+    return s[:r], u, v
+
+
+def truncated_svd(y: Array, r: int, iters: int = 32) -> Tuple[Array, Array, Array]:
+    """Top-r SVD; exact lapack for small problems, iterative otherwise."""
+    if r == 1:
+        s, u, v = power_rank1(y, iters=max(iters, 48))
+        return s[None], u[:, None], v[:, None]
+    d_out, d_in = y.shape
+    if max(d_out, d_in) <= 1024:
+        u, s, vt = jnp.linalg.svd(y.astype(jnp.float32), full_matrices=False)
+        return s[:r], u[:, :r], vt[:r].T
+    return subspace_svd(y, r, iters=iters)
+
+
+def slab_rank1_factors(y_abs: Array, iters: int = 64) -> Tuple[Array, Array]:
+    """Paper Eq. (6): U = sqrt(sigma0) u0, V = sqrt(sigma0) v0 of |Y_BL|.
+
+    For non-negative input the returned factors are entry-wise >= 0
+    (Prop. 2); we clip tiny negative numerical noise to keep the invariant
+    exact.
+    """
+    sigma, u, v = power_rank1(y_abs, iters=iters)
+    root = jnp.sqrt(jnp.maximum(sigma, 0.0))
+    return jnp.maximum(u, 0.0) * root, jnp.maximum(v, 0.0) * root
+
+
+def low_rank_matrix(u: Array, v: Array) -> Array:
+    """W_L = U V^T for (Do, r), (Di, r) factors (r may be 1)."""
+    if u.ndim == 1:
+        u = u[:, None]
+    if v.ndim == 1:
+        v = v[:, None]
+    return u @ v.T

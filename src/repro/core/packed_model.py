@@ -1,0 +1,97 @@
+"""Packed-weight model serving: every compressed linear lives in the
+SLaB on-HBM format (N:M values+indices or dense-masked W_S, bit-packed
+W_B, rank-1 u/v) and forwards through the fused Pallas kernels.
+
+`PackedLinear` is a pure-array NamedTuple (all static metadata — the
+N:M pattern, D_in — is derivable from leaf shapes), so stacks of packed
+layers slice cleanly through `lax.scan` like any other parameter.
+
+CPU note: Mosaic only compiles on TPU; on CPU the kernels run in
+interpret mode (numerics-exact, slow) — the packed path is exercised by
+tests/examples at smoke scale and is the TPU serving configuration.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import pack_nm, pack_sign_bits
+from repro.core.slab import SLaBDecomposition
+
+Array = jax.Array
+
+
+class PackedLinear(NamedTuple):
+    """One compressed linear, model-orientation (computes x @ Wᵀ for the
+    paper's (D_out, D_in) W — i.e. a drop-in for x @ w, w (D_in, D_out)).
+
+    N:M mode: sparse_vals/idx (D_out, D_in/m, n); unstructured mode:
+    sparse_vals is the dense-masked W_S (D_out, D_in) and sparse_idx is
+    None (the documented TPU fallback — lane gathers are VPU-hostile).
+    """
+    sparse_vals: Array
+    sparse_idx: Optional[Array]
+    b_packed: Array          # (D_out, D_in/32) uint32
+    u: Array                 # (D_out,)
+    v: Array                 # (D_in,)
+
+
+def pack_linear(dec: SLaBDecomposition, pattern: Optional[str],
+                dtype=jnp.float32) -> PackedLinear:
+    d_out, d_in = dec.w_s.shape
+    u = (dec.u[:, 0] if dec.u.ndim == 2 else dec.u).astype(dtype)
+    v = (dec.v[:, 0] if dec.v.ndim == 2 else dec.v).astype(dtype)
+    bp = pack_sign_bits(dec.w_b)
+    if pattern is not None:
+        n, m = map(int, pattern.split(":"))
+        nm = pack_nm(dec.w_s.astype(dtype), n, m)
+        return PackedLinear(nm.values, nm.indices, bp, u, v)
+    return PackedLinear(dec.w_s.astype(dtype), None, bp, u, v)
+
+
+def packed_matmul(x: Array, w: PackedLinear,
+                  interpret: Optional[bool] = None) -> Array:
+    """x (..., D_in) @ Wᵀ through the fused kernel."""
+    from repro.kernels import ops
+    d_in = w.v.shape[-1]
+    if w.sparse_idx is not None:
+        m_pat = d_in // w.sparse_vals.shape[-2]
+        return ops.slab_nm_matmul(
+            x, w.sparse_vals, w.sparse_idx, m_pat, w.b_packed, w.u, w.v,
+            bm=128, bn=128, bk=min(512, d_in), interpret=interpret
+        ).astype(x.dtype)
+    return ops.slab_matmul(
+        x, w.sparse_vals.astype(x.dtype), w.b_packed, w.u, w.v,
+        bm=128, bn=128, bk=min(512, d_in), interpret=interpret
+    ).astype(x.dtype)
+
+
+def linear(x: Array, w) -> Array:
+    """Dispatch point used by the model layers: dense `x @ w` or the
+    packed fused kernel."""
+    if isinstance(w, PackedLinear):
+        return packed_matmul(x, w)
+    return x @ w
+
+
+def pack_model(params: dict,
+               decs: Dict[Tuple[int, str], SLaBDecomposition],
+               n_layers: int,
+               pattern: Optional[str] = None) -> dict:
+    """Replace each decomposed linear in the stacked-params tree with a
+    stacked PackedLinear. ``decs`` comes from core.pipeline.compress_model
+    (keep_decompositions=True)."""
+    from repro.core.pipeline import _get, _set
+    out = jax.tree.map(lambda a: a, params)     # shallow copy
+    paths = sorted({p for (_, p) in decs})
+    for path in paths:
+        per_layer = [pack_linear(decs[(l, path)], pattern)
+                     for l in range(n_layers)
+                     if (l, path) in decs]
+        if len(per_layer) != n_layers:
+            continue                             # partial coverage: skip
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+        _set(out["layers"], path, stacked)
+    return out

@@ -1,0 +1,137 @@
+"""Storage packing for SLaB components — the formats the Pallas kernels
+stream from HBM.
+
+- sign bits:   W_B {±1} -> uint32 words, 32 signs/word along D_in
+               (16x smaller than bf16; bit j of word g is column g*32+j).
+- N:M packed:  W_S (2:4 / 4:8) -> values (Do, Di*n/m) + int8 indices
+               (position of each kept element inside its m-group).
+- ELL packed:  row-uniform unstructured W_S -> values (Do, nnz) + int32
+               column indices (padded rows get index 0, value 0).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ------------------------------ sign bits ------------------------------
+
+def pack_sign_bits(w_b: Array) -> Array:
+    """Pack ±1 (or bool 'is positive') into uint32 along the last dim.
+
+    D_in must be a multiple of 32 (true for every assigned architecture).
+    """
+    d_out, d_in = w_b.shape
+    if d_in % 32:
+        raise ValueError(f"D_in={d_in} not a multiple of 32")
+    pos = (w_b > 0).astype(jnp.uint32).reshape(d_out, d_in // 32, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(pos << shifts[None, None, :], axis=-1).astype(jnp.uint32)
+
+
+def unpack_sign_bits(packed: Array, d_in: int, dtype=jnp.int8) -> Array:
+    """Inverse of pack_sign_bits: uint32 words -> ±1 matrix (Do, d_in)."""
+    d_out, words = packed.shape
+    if words * 32 != d_in:
+        raise ValueError(f"{words} words cannot hold D_in={d_in}")
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (packed[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    pm = bits.astype(jnp.int32) * 2 - 1
+    return pm.reshape(d_out, d_in).astype(dtype)
+
+
+# ------------------------------ N:M packing ----------------------------
+
+class NMPacked(NamedTuple):
+    values: Array   # (Do, Di // m, n)
+    indices: Array  # (Do, Di // m, n) int8, position within the m-group
+    n: int
+    m: int
+    d_in: int
+
+
+def pack_nm(w_s: Array, n: int, m: int) -> NMPacked:
+    """Pack an N:M-sparse dense-masked matrix. Rows whose group has fewer
+    than n non-zeros are padded with (value 0, index = smallest unused)."""
+    d_out, d_in = w_s.shape
+    if d_in % m:
+        raise ValueError(f"D_in={d_in} not divisible by m={m}")
+    g = w_s.reshape(d_out, d_in // m, m)
+    nz = (g != 0)
+    # Order: non-zeros first (stable by position), then zeros.
+    order_key = jnp.where(nz, jnp.arange(m)[None, None, :], m + jnp.arange(m)[None, None, :])
+    idx = jnp.argsort(order_key, axis=-1)[..., :n].astype(jnp.int8)
+    vals = jnp.take_along_axis(g, idx.astype(jnp.int32), axis=-1)
+    return NMPacked(vals.astype(w_s.dtype), idx, n, m, d_in)
+
+
+def unpack_nm(p: NMPacked) -> Array:
+    d_out = p.values.shape[0]
+    rows = jnp.arange(d_out)[:, None, None]
+    grps = jnp.arange(p.d_in // p.m)[None, :, None]
+    g = jnp.zeros((d_out, p.d_in // p.m, p.m), p.values.dtype)
+    g = g.at[rows, grps, p.indices.astype(jnp.int32)].add(p.values)
+    return g.reshape(d_out, p.d_in)
+
+
+def nm_packed_bits(p: NMPacked, bits: int = 16) -> int:
+    """Storage cost: values at b bits + ceil(log2(m)) bits per index."""
+    import math
+    idx_bits = max(1, math.ceil(math.log2(p.m)))
+    return p.values.size * bits + p.indices.size * idx_bits
+
+
+# ------------------------------ ELL packing ----------------------------
+
+class ELLPacked(NamedTuple):
+    values: Array   # (Do, nnz)
+    indices: Array  # (Do, nnz) int32 column ids
+    d_in: int
+
+
+def ell_pack(w_s: Array, nnz: int) -> ELLPacked:
+    """Pack a row-uniform sparse matrix ((1, D_in) comparison groups make
+    every row carry the same nnz). Short rows are zero-padded."""
+    d_out, d_in = w_s.shape
+    keys = jnp.where(w_s != 0, -jnp.abs(w_s.astype(jnp.float32)), jnp.inf)
+    idx = jnp.argsort(keys, axis=1)[:, :nnz].astype(jnp.int32)
+    idx = jnp.sort(idx, axis=1)
+    vals = jnp.take_along_axis(w_s, idx, axis=1)
+    return ELLPacked(vals, idx, d_in)
+
+
+def ell_unpack(p: ELLPacked) -> Array:
+    d_out, nnz = p.values.shape
+    rows = jnp.arange(d_out)[:, None]
+    out = jnp.zeros((d_out, p.d_in), p.values.dtype)
+    return out.at[rows, p.indices].add(p.values)
+
+
+# --------------------------- SLaB packed bundle ------------------------
+
+class SLaBPacked(NamedTuple):
+    """On-HBM serving format of one compressed linear layer."""
+    sparse: NMPacked | ELLPacked | Array  # dense-masked fallback is a raw Array
+    u: Array
+    v: Array
+    b_packed: Array  # uint32 (Do, Di/32)
+    d_out: int
+    d_in: int
+
+
+def pack_decomposition(dec, pattern: str | None = None) -> SLaBPacked:
+    from repro.core import sparsity as sp
+    d_out, d_in = dec.w_s.shape
+    if pattern is not None:
+        n, m = sp.parse_pattern(pattern)
+        sparse = pack_nm(dec.w_s, n, m)
+    else:
+        nnz = sp.mask_nnz_per_row_uniform(dec.w_s != 0)
+        sparse = ell_pack(dec.w_s, nnz) if nnz is not None else dec.w_s
+    u = dec.u[:, 0] if dec.u.ndim == 2 and dec.u.shape[1] == 1 else dec.u
+    v = dec.v[:, 0] if dec.v.ndim == 2 and dec.v.shape[1] == 1 else dec.v
+    return SLaBPacked(sparse, u, v, pack_sign_bits(dec.w_b), d_out, d_in)

@@ -1,0 +1,334 @@
+"""Layer-wise one-shot compression driver (the SparseGPT/Wanda protocol
+the paper follows, §II-A1):
+
+  for each transformer layer, in order:
+    (1) forward the calibration set through the *already-compressed*
+        prefix to the layer's inputs,
+    (2) capture per-linear input activations -> ‖X‖₂ column norms,
+    (3) decompose every linear in the layer (SLaB / a baseline),
+    (4) replace the weights and continue forward with the compressed
+        layer's outputs (error propagation).
+
+Works on the model zoo's stacked-params layout: weights live as
+``params["layers"][...]`` leaves with a leading L dim; we slice layer l,
+compress its 2-D linears, and write them back. MoE experts are
+compressed per-expert with expert-specific activation statistics
+(DESIGN.md §4): the dispatched-token subset that actually reaches each
+expert is what feeds its ‖X‖₂.
+
+Per the paper, embeddings and the LM head are excluded (§III-A4); norms,
+biases and other 1-D leaves are untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as base_lib
+from repro.core import scores as scores_lib
+from repro.core.slab import SLaBConfig, slab_decompose, reconstruct
+from repro.models import lm
+from repro.models.common import ArchConfig, positions_for, rms_norm
+
+Array = jax.Array
+
+# 2-D weight leaves eligible for compression, per layer family.
+# (path within one layer's params dict, input-activation source)
+DENSE_LINEARS = ["attn.wq", "attn.wk", "attn.wv", "attn.wo",
+                 "mlp.w_gate", "mlp.w_up", "mlp.w_down"]
+
+
+@dataclasses.dataclass
+class CompressStats:
+    layer: int
+    name: str
+    err_before: float
+    err_after: float
+    cr: float
+
+
+def _get(d: dict, path: str):
+    cur = d
+    for k in path.split("."):
+        if k not in cur:
+            return None
+        cur = cur[k]
+    return cur
+
+
+def _set(d: dict, path: str, val):
+    ks = path.split(".")
+    cur = d
+    for k in ks[:-1]:
+        cur = cur[k]
+    cur[ks[-1]] = val
+
+
+def linear_paths(cfg: ArchConfig) -> List[str]:
+    """Compressible 2-D linears inside one layer of this family."""
+    if cfg.family in ("ssm", "hybrid"):
+        return ["mamba.in_z", "mamba.in_x", "mamba.out"]
+    paths = ["attn.wq", "attn.wk", "attn.wv", "attn.wo"]
+    if cfg.family == "moe":
+        paths += ["moe.w_gate", "moe.w_up", "moe.w_down"]  # (E, D, F) 3-D
+        if cfg.shared_ff:
+            paths += ["moe.shared.w_gate", "moe.shared.w_up",
+                      "moe.shared.w_down"]
+    elif cfg.act == "swiglu":
+        paths += ["mlp.w_gate", "mlp.w_up", "mlp.w_down"]
+    else:
+        paths += ["mlp.w_up", "mlp.w_down"]
+    return paths
+
+
+def _compress_matrix(w: Array, act_norms: Optional[Array], method: str,
+                     scfg: SLaBConfig, hessian: Optional[Array] = None
+                     ) -> Tuple[Array, Optional[object]]:
+    """Returns (compressed dense equivalent, SLaBDecomposition or None).
+    ``w`` is stored (D_in, D_out) in our models — transpose to the
+    paper's (D_out, D_in) convention and back."""
+    wt = w.T.astype(jnp.float32)
+    dec = None
+    if method == "slab":
+        dec = slab_decompose(wt, act_norms, scfg)
+        out = reconstruct(dec)
+    elif method == "wanda":
+        # Wanda at CR c keeps (1-c) of weights (no side components)
+        out = base_lib.wanda_prune(
+            wt, act_norms if act_norms is not None
+            else jnp.ones((wt.shape[1],), jnp.float32),
+            1.0 - scfg.cr, group=scfg.group, pattern=scfg.pattern)
+    elif method == "sparsegpt":
+        assert hessian is not None
+        out = base_lib.sparsegpt_prune(wt, hessian, 1.0 - scfg.cr,
+                                       pattern=scfg.pattern)
+    elif method == "magnitude":
+        out = base_lib.magnitude_prune(wt, 1.0 - scfg.cr,
+                                       group=scfg.group,
+                                       pattern=scfg.pattern)
+    else:
+        raise ValueError(method)
+    return out.T.astype(w.dtype), dec
+
+
+def _layer_activations(cfg: ArchConfig, params: dict, lp: dict, idx: int,
+                       h: Array, positions: Array) -> Dict[str, Array]:
+    """Column-norm stats for every linear in layer ``idx`` given the
+    layer input h (N, S, D). Mirrors models.lm._layer_fwd wiring."""
+    stats: Dict[str, Array] = {}
+
+    def note(path: str, x: Array):
+        stats[path] = scores_lib.act_col_norms(x)
+
+    if cfg.family in ("ssm", "hybrid"):
+        hn = rms_norm(h, lp["norm"], cfg.norm_eps)
+        note("mamba.in_z", hn)
+        note("mamba.in_x", hn)
+        # out_proj input: the gated/normalized y — recompute block pieces
+        from repro.models import mamba2 as mamba_lib
+        b, s, _ = hn.shape
+        z = hn @ lp["mamba"]["in_z"]
+        xs = jax.nn.silu(mamba_lib._causal_conv(
+            hn @ lp["mamba"]["in_x"], lp["mamba"]["conv_x"]))
+        bmat = jax.nn.silu(mamba_lib._causal_conv(
+            hn @ lp["mamba"]["in_b"], lp["mamba"]["conv_b"]))
+        cmat = jax.nn.silu(mamba_lib._causal_conv(
+            hn @ lp["mamba"]["in_c"], lp["mamba"]["conv_c"]))
+        dt = jax.nn.softplus(hn.astype(jnp.float32) @ lp["mamba"]["in_dt"]
+                             + lp["mamba"]["dt_bias"])
+        a = -jnp.exp(lp["mamba"]["a_log"])
+        xh = xs.reshape(b, s, cfg.ssm_heads, cfg.ssm_headdim)
+        y, _ = mamba_lib._ssd_chunk_scan(xh, dt, a, bmat, cmat,
+                                         cfg.ssm_chunk)
+        y = y + xh.astype(jnp.float32) * lp["mamba"]["d_skip"][None, None, :, None]
+        y = y.reshape(b, s, cfg.d_inner).astype(cfg.dtype)
+        y = rms_norm(y * jax.nn.silu(z), lp["mamba"]["gate_norm"],
+                     cfg.norm_eps)
+        note("mamba.out", y)
+        return stats
+
+    hn = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+    for pth in ("attn.wq", "attn.wk", "attn.wv"):
+        note(pth, hn)
+    # wo input: attention context
+    from repro.models import attention as attn_lib
+    ctx_out = attn_lib.multihead_attention(cfg, lp["attn"], hn, positions)
+    # recover pre-wo input: rerun without wo — cheaper: note via hook-free
+    # recompute of the context (wo input = out before @wo)
+    b, s, _ = hn.shape
+    h2 = h + ctx_out
+    hm = rms_norm(h2, lp["mlp_norm"], cfg.norm_eps)
+    # context (pre-wo) activation: approximate with hn-driven recompute
+    ctx = _attention_context(cfg, lp["attn"], hn, positions)
+    note("attn.wo", ctx)
+
+    if cfg.family == "moe":
+        note("moe.w_gate", hm)   # per-expert stats refined below
+        note("moe.w_up", hm)
+        from repro.models import moe as moe_lib
+        probs = jax.nn.softmax(
+            (hm.reshape(-1, hm.shape[-1]).astype(jnp.float32)
+             @ lp["moe"]["router"].astype(jnp.float32)), axis=-1)
+        top = jnp.argsort(-probs, axis=-1)[:, :cfg.top_k]
+        flat = hm.reshape(-1, hm.shape[-1]).astype(jnp.float32)
+        e_norms, h_norms = [], []
+        for e in range(cfg.n_experts):
+            sel = jnp.any(top == e, axis=-1)
+            xe = flat * sel[:, None]
+            e_norms.append(jnp.sqrt(jnp.sum(xe * xe, axis=0)))
+            he = jax.nn.silu(xe @ lp["moe"]["w_gate"][e]) * \
+                (xe @ lp["moe"]["w_up"][e])
+            h_norms.append(jnp.sqrt(jnp.sum(
+                he.astype(jnp.float32) ** 2, axis=0)))
+        stats["moe.w_gate"] = jnp.stack(e_norms)       # (E, D)
+        stats["moe.w_up"] = jnp.stack(e_norms)
+        stats["moe.w_down"] = jnp.stack(h_norms)       # (E, F)
+        if cfg.shared_ff:
+            note("moe.shared.w_gate", hm)
+            note("moe.shared.w_up", hm)
+            sh = jax.nn.silu(hm @ lp["moe"]["shared"]["w_gate"]) * \
+                (hm @ lp["moe"]["shared"]["w_up"])
+            note("moe.shared.w_down", sh)
+    else:
+        note("mlp.w_gate", hm)
+        note("mlp.w_up", hm)
+        if cfg.act == "swiglu":
+            mid = jax.nn.silu(hm @ lp["mlp"]["w_gate"]) * \
+                (hm @ lp["mlp"]["w_up"])
+        else:
+            from repro.models.common import activation
+            kind = "gelu" if cfg.act == "gelu" else "relu2"
+            mid = activation(hm @ lp["mlp"]["w_up"], kind)
+        note("mlp.w_down", mid)
+    return stats
+
+
+def _attention_context(cfg, ap, hn, positions):
+    """Pre-wo attention context (B, S, d_q)."""
+    import types
+    from repro.models import attention as attn_lib
+    # rerun attention but stop before wo: reuse internals
+    b, s, d = hn.shape
+    h_, kv, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+    g = h_ // kv
+    from repro.models.common import rotate
+    q = (hn @ ap["wq"]).reshape(b, s, h_, dh)
+    k = (hn @ ap["wk"]).reshape(b, s, kv, dh)
+    v = (hn @ ap["wv"]).reshape(b, s, kv, dh)
+    q = rotate(cfg, q, positions)
+    k = rotate(cfg, k, positions)
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    q = q * (dh ** -0.5)
+    logits = jnp.einsum("bqhd,bshd->bhqs", q, k,
+                        preferred_element_type=jnp.float32)
+    if cfg.causal:
+        ii = jnp.arange(s)
+        logits = jnp.where((ii[:, None] >= ii[None, :])[None, None],
+                           logits, -1e30)
+    probs = jax.nn.softmax(logits, -1).astype(cfg.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", probs, v).reshape(b, s, cfg.d_q)
+
+
+def compress_model(cfg: ArchConfig, params: dict, calib_tokens: np.ndarray,
+                   method: str = "slab",
+                   scfg: SLaBConfig = SLaBConfig(),
+                   collect_hessian: bool = False,
+                   progress: Optional[Callable[[str], None]] = None,
+                   keep_decompositions: bool = False):
+    """Run the layer-wise protocol. Returns (new params, stats[, decs]).
+
+    ``calib_tokens`` (N, S) int32 (or (N, S, D) embeds for stub-frontend
+    families). Hessians (X^T X) are collected only for SparseGPT.
+    ``keep_decompositions`` additionally returns {(layer, path): dec}
+    for core.packed_model.pack_model (kernel-served packed weights)."""
+    stats: List[CompressStats] = []
+    decs: Dict[Tuple[int, str], object] = {}
+    x = jnp.asarray(calib_tokens)
+    h = lm.embed_inputs(cfg, params, x)
+    b, s = h.shape[0], h.shape[1]
+    positions = positions_for(cfg, b, s)
+    new_layers = jax.tree.map(lambda a: a, params["layers"])  # shallow copy
+
+    for l in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[l], params["layers"])
+        acts = _layer_activations(cfg, params, lp, l, h, positions)
+        hess: Dict[str, Array] = {}
+        if collect_hessian or method == "sparsegpt":
+            hess = _layer_hessians(cfg, lp, h, positions, acts)
+
+        for pth in linear_paths(cfg):
+            w = _get(lp, pth)
+            if w is None:
+                continue
+            an = acts.get(pth)
+            if w.ndim == 3:        # MoE experts (E, D, F): per-expert
+                outs = []
+                for e in range(w.shape[0]):
+                    an_e = an[e] if (an is not None and an.ndim == 2) else an
+                    o, _ = _compress_matrix(w[e], an_e, method, scfg,
+                                            hess.get(pth))
+                    outs.append(o)
+                w_new = jnp.stack(outs)
+            else:
+                w_new, dec = _compress_matrix(w, an, method, scfg,
+                                              hess.get(pth))
+                if keep_decompositions and dec is not None:
+                    decs[(l, pth)] = dec
+            err_b = 0.0
+            err_a = float(scores_lib.weighted_fro_error(
+                w.T.astype(jnp.float32), w_new.T.astype(jnp.float32),
+                None)) if w.ndim == 2 else 0.0
+            stats.append(CompressStats(l, pth, err_b, err_a, scfg.cr))
+            _set(lp, pth, w_new)
+
+        # write back and propagate through the *compressed* layer
+        new_layers = jax.tree.map(
+            lambda buf, leaf: buf.at[l].set(leaf), new_layers, lp)
+        params_l = dict(params)
+        params_l["layers"] = new_layers
+        h, _ = lm._layer_fwd(cfg, params_l, lp, jnp.asarray(l), h, positions)
+        if progress:
+            progress(f"layer {l + 1}/{cfg.n_layers} compressed")
+
+    out = dict(params)
+    out["layers"] = new_layers
+    if keep_decompositions:
+        return out, stats, decs
+    return out, stats
+
+
+def _layer_hessians(cfg, lp, h, positions, acts) -> Dict[str, Array]:
+    """X^T X per linear (SparseGPT). Only 2-D dense-family paths."""
+    out: Dict[str, Array] = {}
+    hn = rms_norm(h, lp.get("attn_norm", lp.get("norm")), cfg.norm_eps)
+    flat = hn.reshape(-1, hn.shape[-1]).astype(jnp.float32)
+    hh = flat.T @ flat
+    for pth in ("attn.wq", "attn.wk", "attn.wv"):
+        out[pth] = hh
+    if "mlp" in lp:
+        h2 = h + _attention_context(cfg, lp["attn"], hn, positions) @ \
+            lp["attn"]["wo"]
+        hm = rms_norm(h2, lp["mlp_norm"], cfg.norm_eps)
+        fm = hm.reshape(-1, hm.shape[-1]).astype(jnp.float32)
+        hmm = fm.T @ fm
+        out["mlp.w_gate"] = hmm
+        out["mlp.w_up"] = hmm
+        if cfg.act == "swiglu":
+            mid = jax.nn.silu(hm @ lp["mlp"]["w_gate"]) * \
+                (hm @ lp["mlp"]["w_up"])
+        else:
+            from repro.models.common import activation
+            mid = activation(hm @ lp["mlp"]["w_up"],
+                             "gelu" if cfg.act == "gelu" else "relu2")
+        fmid = mid.reshape(-1, mid.shape[-1]).astype(jnp.float32)
+        out["mlp.w_down"] = fmid.T @ fmid
+        ctx = _attention_context(cfg, lp["attn"], hn, positions)
+        fc = ctx.reshape(-1, ctx.shape[-1]).astype(jnp.float32)
+        out["attn.wo"] = fc.T @ fc
+    return out

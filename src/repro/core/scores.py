@@ -1,0 +1,60 @@
+"""Activation-aware pruning scores (Wanda-style), with streaming stats.
+
+Paper Algorithm 1, line 3: ``S_X = diag(sqrt(X^T X))`` — the column-wise
+L2 norm of the calibration activations feeding a linear layer. Scores are
+``|Y| * S_X`` broadcast over output rows.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class ActNormAccumulator:
+    """Streaming accumulator for sqrt(sum_t x_t^2) over calibration batches.
+
+    Activations arrive as (..., D_in); everything but the last dim is
+    flattened into the token dim. fp32 accumulation.
+    """
+
+    def __init__(self, d_in: int):
+        self.d_in = d_in
+        self.sumsq = jnp.zeros((d_in,), dtype=jnp.float32)
+        self.count = 0
+
+    def update(self, x: Array) -> "ActNormAccumulator":
+        x = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        if x.shape[-1] != self.d_in:
+            raise ValueError(f"expected D_in={self.d_in}, got {x.shape[-1]}")
+        self.sumsq = self.sumsq + jnp.sum(x * x, axis=0)
+        self.count += x.shape[0]
+        return self
+
+    def norms(self) -> Array:
+        return jnp.sqrt(self.sumsq)
+
+
+def act_col_norms(x: Array) -> Array:
+    """One-shot column norms: diag(sqrt(X^T X)) for X (..., D_in)."""
+    x = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    return jnp.sqrt(jnp.sum(x * x, axis=0))
+
+
+def wanda_score(w: Array, act_norms: Array) -> Array:
+    """S_ij = |W_ij| * ||X_j||_2 (Wanda); ``act_norms`` is (D_in,)."""
+    return jnp.abs(w.astype(jnp.float32)) * act_norms[None, :].astype(jnp.float32)
+
+
+def magnitude_score(w: Array) -> Array:
+    return jnp.abs(w.astype(jnp.float32))
+
+
+def weighted_fro_error(w: Array, w_hat: Array, act_norms: Array | None = None) -> Array:
+    """||(W - W_hat) diag(n)||_F — the layer-output-aware reconstruction
+    error (reduces to plain Frobenius when act_norms is None)."""
+    d = (w - w_hat).astype(jnp.float32)
+    if act_norms is not None:
+        d = d * act_norms[None, :].astype(jnp.float32)
+    return jnp.sqrt(jnp.sum(d * d))

@@ -1,0 +1,204 @@
+"""SLaB: Sparse-Lowrank-Binary decomposition (paper Algorithm 1).
+
+    W  ≈  W_S + W_L ⊙ W_B,    W_L = U Vᵀ (rank-1, ≥ 0),  W_B ∈ {±1}
+
+Alternating optimization, each iteration:
+    W_B ← sign(W − W_S)                      (§II-A3, optimal given W_L ≥ 0)
+    U,V ← rank-1 truncated SVD of |W − W_S|  (§II-A4/A5, Eq. 6)
+    S   ← |W − UVᵀ ⊙ W_B| ⊙ ‖X‖₂             (§II-A2, Wanda-style score)
+    W_S ← mask_topk(S) ⊙ (W − UVᵀ ⊙ W_B)
+
+Note on Algorithm 1 line 8: the pseudocode writes
+``HardThreshold(S, sparsity) ⊘ S_X`` which literally recovers the masked
+*magnitudes* |Y_S|; §II-A2 says pruning is performed *based on* the score
+("pruning is performed based on the magnitude of scoring matrix S"), i.e.
+the score selects positions and the retained *values* are those of
+Y_S = W − W_L ⊙ W_B. We implement the latter (mask ⊙ Y_S), which is the
+standard Wanda semantics the paper builds on and is what makes the
+reconstruction error decrease monotonically in practice.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lowrank, scores, sparsity
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SLaBConfig:
+    """Hyper-parameters of the decomposition (paper §II-B)."""
+
+    cr: float = 0.5                 # compression ratio (Eq. 9)
+    bits: int = 16                  # bit-width b of W_S values and U/V
+    iters: int = 20                 # alternating-optimization steps s
+    group: Tuple[int, int] = (1, 0)  # comparison group (1, D_in) by default
+    pattern: Optional[str] = None   # "2:4" | "4:8" | None (unstructured)
+    rank: int = 1                   # paper default: 1
+    # Ablation switches (Table III):
+    include_binary: bool = True     # False -> W_S + W_L (signed low rank)
+    include_lowrank: bool = True    # False with include_binary -> W_S only
+    factor_mode: bool = False       # True -> W_S + factor-vector ⊙ W_B
+    svd_iters: int = 48
+
+
+class SLaBDecomposition(NamedTuple):
+    """Compressed form of one linear layer's weight.
+
+    w_s  : (D_out, D_in) dense-masked sparse component (storage formats in
+           core.packing / kernels expect exactly this + its mask).
+    u, v : (D_out, r), (D_in, r) low-rank factors, W_L = u @ v.T.
+    w_b  : (D_out, D_in) int8 in {+1, -1}.
+    """
+
+    w_s: Array
+    u: Array
+    v: Array
+    w_b: Array
+
+
+def keep_fraction(
+    cr: float,
+    bits: int,
+    d_out: int,
+    d_in: int,
+    *,
+    rank: int = 1,
+    include_binary: bool = True,
+    include_lowrank: bool = True,
+) -> float:
+    """Paper Eq. (10): non-zero fraction of W_S given the CR budget.
+
+    k/(Do·Di) = 1 − CR − 1/b − r(1/Do + 1/Di); the 1/b term pays for the
+    1-bit binary matrix and the r(…) terms for the rank-r factor vectors.
+    Ablation variants drop the terms for components they do not store.
+    """
+    f = 1.0 - cr
+    if include_binary:
+        f -= 1.0 / bits
+    if include_lowrank:
+        f -= rank * (1.0 / d_out + 1.0 / d_in)
+    if f <= 0:
+        raise ValueError(
+            f"CR={cr} infeasible for shape ({d_out},{d_in}) at b={bits}"
+        )
+    return f
+
+
+def compressed_bits(dec: SLaBDecomposition, bits: int = 16) -> int:
+    """Exact storage cost in bits (Eq. 9 numerator)."""
+    nnz = int(jnp.sum(dec.w_s != 0))
+    total = nnz * bits
+    if dec.w_b is not None and dec.w_b.size:
+        total += dec.w_b.shape[0] * dec.w_b.shape[1]  # 1 bit each
+    if dec.u is not None and dec.u.size:
+        r = dec.u.shape[1] if dec.u.ndim > 1 else 1
+        total += bits * r * (dec.u.shape[0] + dec.v.shape[0])
+    return total
+
+
+def compression_ratio(dec: SLaBDecomposition, bits: int = 16) -> float:
+    d_out, d_in = dec.w_s.shape
+    return 1.0 - compressed_bits(dec, bits) / (bits * d_out * d_in)
+
+
+def low_rank_times_binary(dec: SLaBDecomposition) -> Array:
+    """W_L ⊙ W_B (handles the ablation cases with missing components)."""
+    d_out, d_in = dec.w_s.shape
+    if dec.u is None or not dec.u.size:
+        lr = jnp.zeros((d_out, d_in), jnp.float32)
+    else:
+        lr = lowrank.low_rank_matrix(dec.u, dec.v)
+    if dec.w_b is None or not dec.w_b.size:
+        return lr
+    return lr * dec.w_b.astype(jnp.float32)
+
+
+def reconstruct(dec: SLaBDecomposition) -> Array:
+    """Ŵ = W_S + W_L ⊙ W_B."""
+    return dec.w_s.astype(jnp.float32) + low_rank_times_binary(dec)
+
+
+def _fit_residual(y_bl: Array, cfg: SLaBConfig) -> Tuple[Array, Array, Array]:
+    """Fit (u, v, w_b) to the residual Y_BL = W − W_S under cfg's ablation
+    flags. Returns (u, v, w_b) with empty arrays for absent components."""
+    d_out, d_in = y_bl.shape
+    f32 = y_bl.astype(jnp.float32)
+    empty_u = jnp.zeros((d_out, 0), jnp.float32)
+    empty_v = jnp.zeros((d_in, 0), jnp.float32)
+    empty_b = jnp.zeros((0, 0), jnp.int8)
+
+    if not cfg.include_lowrank and not cfg.include_binary:
+        return empty_u, empty_v, empty_b
+
+    if cfg.include_binary:
+        # W_B = sign(Y_BL), sign(0) := +1  (paper Eq. 6)
+        w_b = jnp.where(f32 >= 0, 1, -1).astype(jnp.int8)
+        if not cfg.include_lowrank:
+            return empty_u, empty_v, w_b
+        y_abs = jnp.abs(f32)
+        if cfg.factor_mode:
+            # Table III "factor ⊙ W_B": per-row scale (quantization-factor
+            # vector), i.e. rank-1 with v fixed to ones.
+            u = jnp.mean(y_abs, axis=1, keepdims=True)
+            v = jnp.ones((d_in, 1), jnp.float32)
+            return u, v, w_b
+        if cfg.rank == 1:
+            u, v = lowrank.slab_rank1_factors(y_abs, iters=cfg.svd_iters)
+            return u[:, None], v[:, None], w_b
+        s, u, v = lowrank.truncated_svd(y_abs, cfg.rank, iters=cfg.svd_iters)
+        root = jnp.sqrt(jnp.maximum(s, 0.0))
+        return u * root[None, :], v * root[None, :], w_b
+    # Low-rank only (Fig. 1 / Table III "W_S + W_L"): signed SVD, no binary.
+    s, u, v = lowrank.truncated_svd(f32, cfg.rank, iters=cfg.svd_iters)
+    root = jnp.sqrt(jnp.maximum(s, 0.0))
+    return u * root[None, :], v * root[None, :], empty_b
+
+
+def slab_decompose(
+    w: Array,
+    act_norms: Optional[Array],
+    cfg: SLaBConfig = SLaBConfig(),
+) -> SLaBDecomposition:
+    """Run Algorithm 1 on one weight matrix.
+
+    ``act_norms`` is ``diag(sqrt(X^T X))`` from calibration; ``None`` falls
+    back to all-ones (pure magnitude scoring).
+    """
+    d_out, d_in = w.shape
+    w32 = w.astype(jnp.float32)
+    if act_norms is None:
+        act_norms = jnp.ones((d_in,), jnp.float32)
+    act_norms = act_norms.astype(jnp.float32)
+
+    frac = keep_fraction(
+        cfg.cr, cfg.bits, d_out, d_in,
+        rank=cfg.rank,
+        include_binary=cfg.include_binary,
+        include_lowrank=cfg.include_lowrank,
+    )
+
+    w_s = jnp.zeros_like(w32)
+    u = v = None
+    w_b = None
+    for _ in range(max(cfg.iters, 1)):
+        u, v, w_b = _fit_residual(w32 - w_s, cfg)
+        lb = low_rank_times_binary(SLaBDecomposition(w_s, u, v, w_b))
+        y_s = w32 - lb
+        s = jnp.abs(y_s) * act_norms[None, :]
+        mask = sparsity.prune_mask(s, frac, group=cfg.group, pattern=cfg.pattern)
+        w_s = jnp.where(mask, y_s, 0.0)
+    return SLaBDecomposition(w_s.astype(w.dtype), u, v, w_b)
+
+
+def decomposition_error(
+    w: Array,
+    dec: SLaBDecomposition,
+    act_norms: Optional[Array] = None,
+) -> Array:
+    return scores.weighted_fro_error(w.astype(jnp.float32), reconstruct(dec), act_norms)

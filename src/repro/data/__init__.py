@@ -1,0 +1,2 @@
+from repro.data.synthetic import (  # noqa: F401
+    SyntheticCorpus, calibration_batch, host_shard)

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: bit-packed binary ⊙ rank-1 matmul.
+
+    y (M, N) = ((x ⊙ v) @ Bᵀ) ⊙ u,   B ∈ {±1} packed 32/uint32 word
+
+HBM traffic for the B operand is 1/16th of bf16 — this is the term that
+makes SLaB pay on a memory-bound TPU decode (DESIGN.md §3). Grid is
+(M/bm, N/bn, K/bk); each step streams an (bn, bk/32) uint32 tile,
+expands to ±1 in VMEM, and feeds the MXU. fp32 accumulation in VMEM
+scratch; ``u`` is applied once on the last K step.
+
+Block shapes: bm/bn/bk multiples of (8,128) tiles; bk multiple of 32·128
+keeps the packed tile lane-aligned (bk/32 lanes of uint32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import unpack_bits_tile
+
+Array = jax.Array
+
+
+def _kernel(x_ref, bp_ref, u_ref, v_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xv = x_ref[...] * v_ref[...]                       # (bm, bk) ⊙ (1, bk)
+    b = unpack_bits_tile(bp_ref[...], xv.dtype)        # (bn, bk) ±1
+    acc_ref[...] += jax.lax.dot_general(
+        xv, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] * u_ref[...].astype(jnp.float32)
+                      ).astype(o_ref.dtype)
+
+
+def binlr_matmul(x: Array, b_packed: Array, u: Array, v: Array,
+                 *, bm: int = 256, bn: int = 256, bk: int = 512,
+                 interpret: bool = False) -> Array:
+    """x (M, K); b_packed (N, K/32) uint32; u (N,); v (K,) -> (M, N)."""
+    m, k = x.shape
+    n = b_packed.shape[0]
+    assert b_packed.shape[1] * 32 == k, (b_packed.shape, k)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0 and bk % 32 == 0
+
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(_kernel, n_k=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk // 32), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, bk), lambda i, j, kk: (0, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, b_packed, u.reshape(1, n), v.reshape(1, k))

@@ -1,0 +1,37 @@
+"""Shared in-VMEM unpack helpers for the SLaB Pallas kernels.
+
+TPU adaptation (DESIGN.md §3): there is no XNOR-popcount datapath on the
+MXU, so the binary matrix is *packed for bandwidth* (1 bit/elt in HBM)
+and expanded to ±1 tiles in VMEM by VPU shift/mask ops; the MXU then
+consumes dense bf16/f32 tiles. Same pattern for N:M sparse values:
+(values, 2-bit indices) stream from HBM, a comparison-one-hot expand
+rebuilds the dense tile in VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def unpack_bits_tile(packed: Array, dtype) -> Array:
+    """(bn, bk/32) uint32 -> (bn, bk) ±1 in ``dtype`` (VPU shift/mask)."""
+    bn, words = packed.shape
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
+    bits = (packed[:, :, None] >> shifts) & jnp.uint32(1)
+    pm1 = (2 * bits.astype(jnp.int32) - 1).astype(dtype)
+    return pm1.reshape(bn, words * 32)
+
+
+def expand_nm_tile(vals: Array, idx: Array, m: int, dtype) -> Array:
+    """(bn, g, n) values + (bn, g, n) int8 positions -> dense (bn, g*m).
+
+    Comparison one-hot expand: dense[o, g, p] = Σ_j vals[o,g,j]·[idx==p].
+    No scatter — pure VPU compares/multiplies, MXU-friendly output.
+    """
+    bn, g, n = vals.shape
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, m), 3)
+    hit = (idx[:, :, :, None].astype(jnp.int32) == pos)
+    dense = jnp.sum(jnp.where(hit, vals[:, :, :, None].astype(dtype), 0), axis=2)
+    return dense.reshape(bn, g * m)

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: flash-decode — grouped-query single-token
+attention against a (possibly int8-quantized) KV cache.
+
+    out (B, KV, G, dh) = softmax(q · Kᵀ / √dh) · V     per (batch, kv head)
+
+Grid (B, KV, S/bs): each step streams one (bs, dh) K/V chunk HBM→VMEM,
+updates an online-softmax accumulator in VMEM scratch (running max m,
+normalizer l, weighted sum acc), and writes the normalized output on
+the last chunk. The (S,) score row is never materialized in HBM —
+exactly the flash-attention trick in its decode form, which is what the
+GSPMD path approximates with the "kv_seq over model" sharding.
+
+int8 mode: K/V chunks arrive as int8 + per-(token, head) scales; the
+dequant multiply happens in VMEM on the chunk only (the HBM stream is
+the 1-byte payload — 2x less than bf16, the §Perf A2 term).
+
+Valid-length masking uses a scalar-prefetch length per batch row
+(cache slots beyond `length` are ignored).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, bs: int, n_s: int, quant: bool):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (G, dh)
+    k = k_ref[0, :, 0].astype(jnp.float32)              # (bs, dh)
+    v = v_ref[0, :, 0].astype(jnp.float32)              # (bs, dh)
+    if quant:
+        k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+        v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
+
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    # mask positions beyond the valid cache length
+    pos = s * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = pos < len_ref[b]
+    scores = jnp.where(valid, scores, NEG_INF)          # (G, bs)
+
+    m_prev = m_ref[...]                                 # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)                         # (G, bs)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s == n_s - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode(q: Array, k: Array, v: Array, lengths: Array,
+                 k_scale: Array | None = None,
+                 v_scale: Array | None = None,
+                 *, bs: int = 512, interpret: bool = False) -> Array:
+    """q (B, KV, G, dh) pre-scaled by 1/sqrt(dh); k/v (B, S, KV, dh)
+    [int8 when scales given, with k_scale/v_scale (B, S, KV)];
+    lengths (B,) int32. Returns (B, KV, G, dh)."""
+    b, kv, g, dh = q.shape
+    s = k.shape[1]
+    bs = min(bs, s)
+    assert s % bs == 0, (s, bs)
+    quant = k_scale is not None
+    if not quant:       # dummy scale operands keep one kernel signature
+        k_scale = jnp.ones((b, s, kv), jnp.float32)
+        v_scale = jnp.ones((b, s, kv), jnp.float32)
+
+    grid = (b, kv, s // bs)
+    kernel = functools.partial(_kernel, bs=bs, n_s=grid[2], quant=quant)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda bb, kk, ss, lens: (bb, kk, 0, 0)),
+            pl.BlockSpec((1, bs, 1, dh), lambda bb, kk, ss, lens: (bb, ss, kk, 0)),
+            pl.BlockSpec((1, bs, 1, dh), lambda bb, kk, ss, lens: (bb, ss, kk, 0)),
+            pl.BlockSpec((1, bs, 1), lambda bb, kk, ss, lens: (bb, ss, kk)),
+            pl.BlockSpec((1, bs, 1), lambda bb, kk, ss, lens: (bb, ss, kk)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh),
+                               lambda bb, kk, ss, lens: (bb, kk, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, dh), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, dh), q.dtype),
+        interpret=interpret,
+    )(lengths, q, k, v, k_scale, v_scale)

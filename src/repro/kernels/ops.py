@@ -1,0 +1,119 @@
+"""Jit'd public wrappers for the SLaB Pallas kernels.
+
+Handles shape padding to block multiples, dtype plumbing, the
+interpret-mode switch (CPU validation; compiled Mosaic on real TPU), and
+a `slab_linear_kernel` convenience that consumes a `SLaBPacked` bundle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import NMPacked, SLaBPacked
+from repro.kernels import binlr as binlr_k
+from repro.kernels import nm_sparse as nm_k
+from repro.kernels import slab_matmul as slab_k
+
+Array = jax.Array
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_rows(x: Array, mult: int) -> Array:
+    m = x.shape[0]
+    pad = (-m) % mult
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def binlr(x: Array, b_packed: Array, u: Array, v: Array,
+          bm: int = 256, bn: int = 256, bk: int = 512,
+          interpret: Optional[bool] = None) -> Array:
+    interpret = _on_cpu() if interpret is None else interpret
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    m = x2.shape[0]
+    x2 = _pad_rows(x2, min(bm, max(m, 1)))
+    y = binlr_k.binlr_matmul(x2, b_packed, u, v, bm=bm, bn=bn, bk=bk,
+                             interpret=interpret)
+    return y[:m].reshape(*lead, -1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m_pat", "bm", "bn", "bk", "interpret"))
+def nm_matmul(x: Array, vals: Array, idx: Array, m_pat: int,
+              bm: int = 256, bn: int = 256, bk: int = 512,
+              interpret: Optional[bool] = None) -> Array:
+    interpret = _on_cpu() if interpret is None else interpret
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    m = x2.shape[0]
+    x2 = _pad_rows(x2, min(bm, max(m, 1)))
+    y = nm_k.nm_matmul(x2, vals, idx, m_pat, bm=bm, bn=bn, bk=bk,
+                       interpret=interpret)
+    return y[:m].reshape(*lead, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def slab_matmul(x: Array, w_s: Array, b_packed: Array, u: Array, v: Array,
+                bm: int = 256, bn: int = 256, bk: int = 512,
+                interpret: Optional[bool] = None) -> Array:
+    interpret = _on_cpu() if interpret is None else interpret
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    m = x2.shape[0]
+    x2 = _pad_rows(x2, min(bm, max(m, 1)))
+    y = slab_k.slab_matmul(x2, w_s, b_packed, u, v, bm=bm, bn=bn, bk=bk,
+                           interpret=interpret)
+    return y[:m].reshape(*lead, -1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m_pat", "bm", "bn", "bk", "interpret"))
+def slab_nm_matmul(x: Array, vals: Array, idx: Array, m_pat: int,
+                   b_packed: Array, u: Array, v: Array,
+                   bm: int = 256, bn: int = 256, bk: int = 512,
+                   interpret: Optional[bool] = None) -> Array:
+    interpret = _on_cpu() if interpret is None else interpret
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    m = x2.shape[0]
+    x2 = _pad_rows(x2, min(bm, max(m, 1)))
+    y = slab_k.slab_nm_matmul(x2, vals, idx, m_pat, b_packed, u, v,
+                              bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return y[:m].reshape(*lead, -1)
+
+
+def flash_decode_attention(q: Array, k: Array, v: Array, lengths: Array,
+                           k_scale: Optional[Array] = None,
+                           v_scale: Optional[Array] = None,
+                           bs: int = 512,
+                           interpret: Optional[bool] = None) -> Array:
+    """Grouped-query decode attention (optionally int8 KV) via the
+    flash-decode kernel. q (B, KV, G, dh) pre-scaled by 1/sqrt(dh)."""
+    from repro.kernels.flash_decode import flash_decode
+    interpret = _on_cpu() if interpret is None else interpret
+    return flash_decode(q, k, v, lengths, k_scale, v_scale, bs=bs,
+                        interpret=interpret)
+
+
+def slab_linear_kernel(x: Array, packed: SLaBPacked, **kw) -> Array:
+    """Forward one SLaB-compressed linear from its packed bundle via the
+    fused kernel (N:M if the sparse part is N:M packed, else dense)."""
+    if isinstance(packed.sparse, NMPacked):
+        s = packed.sparse
+        return slab_nm_matmul(x, s.values, s.indices, s.m,
+                              packed.b_packed, packed.u, packed.v, **kw)
+    w_s = packed.sparse if isinstance(packed.sparse, jax.Array) else None
+    if w_s is None:
+        from repro.core.packing import ell_unpack
+        w_s = ell_unpack(packed.sparse)
+    return slab_matmul(x, w_s.astype(x.dtype), packed.b_packed,
+                       packed.u, packed.v, **kw)

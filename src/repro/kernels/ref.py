@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import unpack_nm, unpack_sign_bits, NMPacked
+
+Array = jax.Array
+
+
+def binlr_ref(x: Array, b_packed: Array, u: Array, v: Array) -> Array:
+    """y = ((x ⊙ v) @ Bᵀ) ⊙ u — rank-1 ⊙ binary term of a SLaB linear."""
+    k = x.shape[-1]
+    b = unpack_sign_bits(b_packed, k, dtype=jnp.float32)
+    return (((x.astype(jnp.float32) * v.astype(jnp.float32)) @ b.T)
+            * u.astype(jnp.float32))
+
+
+def nm_matmul_ref(x: Array, vals: Array, idx: Array, m: int) -> Array:
+    """y = x @ W_Sᵀ with W_S in N:M packed form."""
+    n = vals.shape[-1]
+    d_in = vals.shape[1] * m
+    w = unpack_nm(NMPacked(vals, idx, n, m, d_in))
+    return x.astype(jnp.float32) @ w.astype(jnp.float32).T
+
+
+def slab_matmul_ref(x: Array, w_s: Array, b_packed: Array,
+                    u: Array, v: Array) -> Array:
+    """Fused SLaB linear, dense-masked sparse part:
+    y = x @ W_Sᵀ + ((x ⊙ v) @ Bᵀ) ⊙ u."""
+    y = x.astype(jnp.float32) @ w_s.astype(jnp.float32).T
+    return y + binlr_ref(x, b_packed, u, v)
+
+
+def slab_nm_matmul_ref(x: Array, vals: Array, idx: Array, m: int,
+                       b_packed: Array, u: Array, v: Array) -> Array:
+    """Fused SLaB linear with N:M packed sparse part."""
+    return nm_matmul_ref(x, vals, idx, m) + binlr_ref(x, b_packed, u, v)
+
+
+def flash_decode_ref(q: Array, k: Array, v: Array, lengths: Array,
+                     k_scale: Array | None = None,
+                     v_scale: Array | None = None) -> Array:
+    """Grouped decode attention oracle. q (B,KV,G,dh) pre-scaled;
+    k/v (B,S,KV,dh); lengths (B,). Returns (B,KV,G,dh)."""
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale.astype(jnp.float32)[..., None]
+        vf = vf * v_scale.astype(jnp.float32)[..., None]
+    logits = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32), kf)
+    pos = jnp.arange(k.shape[1])
+    mask = pos[None, :] < lengths[:, None]                  # (B, S)
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bkgs,bskd->bkgd", p, vf).astype(q.dtype)

@@ -1,0 +1,179 @@
+"""One dry-run cell: lower + compile a (arch x shape x mesh) program and
+extract its analysis artifacts. Importable (tests run it on tiny meshes);
+``launch.dryrun`` is the 512-device entrypoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch import hlo_stats
+from repro.models import lm
+from repro.models.common import ArchConfig
+from repro.optim.adamw import AdamWConfig
+from repro.runtime import specs as specs_lib
+from repro.runtime.meshctx import use_mesh
+from repro.runtime.sharding import Planner
+from repro.runtime.step import make_serve_fn, make_train_fn, make_prefill_fn
+
+# bf16 optimizer moments for the 340B config (memory budget, DESIGN §5)
+BF16_MOMENT_ARCHS = {"nemotron_4_340b"}
+
+
+def adamw_config_for(arch_id: str) -> AdamWConfig:
+    if configs.normalize(arch_id) in BF16_MOMENT_ARCHS:
+        return AdamWConfig(moment_dtype=jnp.bfloat16)
+    return AdamWConfig()
+
+
+def pick_microbatches(shape: configs.ShapeSpec, planner: Planner,
+                      per_device: int = 1) -> int:
+    """Gradient-accumulation depth: one (or ``per_device``) sequence(s)
+    per device per microbatch — the live-activation budget at 340B."""
+    dp = 1
+    for a in planner.batch_axes():
+        dp *= planner.mesh.shape[a]
+    mb = max(1, shape.global_batch // (dp * per_device))
+    while shape.global_batch % mb:
+        mb -= 1
+    return mb
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str
+    ok: bool
+    lower_s: float = 0.0
+    compile_s: float = 0.0
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    hlo_flops: float = 0.0          # trip-scaled, from HLO text
+    hlo_bytes: float = 0.0          # trip-scaled read+write estimate
+    peak_memory_per_device: float = 0.0
+    argument_bytes: float = 0.0
+    output_bytes: float = 0.0
+    temp_bytes: float = 0.0
+    collectives: Optional[Dict[str, Any]] = None
+    microbatches: int = 1
+    error: Optional[str] = None
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def lower_cell(arch_id: str, shape_name: str, mesh: Mesh,
+               microbatch_per_device: int = 1, remat: str = "nothing",
+               cfg_override: Optional[ArchConfig] = None,
+               shape_override: Optional[configs.ShapeSpec] = None,
+               serve_replicate_embed: bool = False,
+               kv_quant: bool = False,
+               grad_dtype=jnp.float32):
+    """Returns (lowered, meta) for the cell's program."""
+    cfg = cfg_override if cfg_override is not None else configs.get(arch_id)
+    if kv_quant:
+        cfg = cfg.with_(kv_quant=True)
+    shape = shape_override or configs.SHAPES[shape_name]
+    planner = Planner(mesh, cfg)
+    if serve_replicate_embed:                       # §Perf variant
+        rules = dict(planner.rules)
+        rules["embed"] = []
+        planner = Planner(mesh, cfg, rules=rules)
+    acfg = adamw_config_for(arch_id)
+    meta: Dict[str, Any] = {"kind": shape.kind}
+
+    with use_mesh(mesh):
+        if shape.kind == "train":
+            mb = pick_microbatches(shape, planner, microbatch_per_device)
+            meta["microbatches"] = mb
+            fn = make_train_fn(cfg, acfg, planner, microbatches=mb,
+                               remat=remat, grad_dtype=grad_dtype)
+            params, _ = specs_lib.abstract_params(cfg, planner)
+            opt, _ = specs_lib.abstract_opt_state(cfg, planner, acfg)
+            batch = specs_lib.batch_specs(cfg, shape, planner)
+            lowered = jax.jit(fn, donate_argnums=(0, 1)).lower(
+                params, opt, batch)
+        elif shape.kind == "prefill":
+            fn = make_prefill_fn(cfg, planner)
+            params, _ = specs_lib.abstract_params(cfg, planner)
+            batch = specs_lib.batch_specs(cfg, shape, planner)
+            args = (params, batch["inputs"])
+            if "positions" in batch:
+                args = args + (batch["positions"],)
+            lowered = jax.jit(fn).lower(*args)
+        else:  # decode
+            fn = make_serve_fn(cfg, planner)
+            params, _ = specs_lib.abstract_params(cfg, planner)
+            cache, token, pos = specs_lib.decode_specs(cfg, shape, planner)
+            lowered = jax.jit(fn, donate_argnums=(1,)).lower(
+                params, cache, token, pos)
+    return lowered, meta
+
+
+def run_cell(arch_id: str, shape_name: str, mesh: Mesh, mesh_name: str,
+             microbatch_per_device: int = 1, remat: str = "nothing",
+             with_hlo_stats: bool = True,
+             cfg_override: Optional[ArchConfig] = None,
+             shape_override: Optional[configs.ShapeSpec] = None,
+             serve_replicate_embed: bool = False,
+             kv_quant: bool = False,
+             grad_dtype=jnp.float32) -> CellResult:
+    shape = shape_override or configs.SHAPES[shape_name]
+    res = CellResult(arch=arch_id, shape=shape_name, mesh=mesh_name,
+                     kind=shape.kind, ok=False)
+    try:
+        t0 = time.monotonic()
+        lowered, meta = lower_cell(
+            arch_id, shape_name, mesh, microbatch_per_device, remat,
+            cfg_override=cfg_override, shape_override=shape_override,
+            serve_replicate_embed=serve_replicate_embed,
+            kv_quant=kv_quant, grad_dtype=grad_dtype)
+        res.lower_s = time.monotonic() - t0
+        res.microbatches = meta.get("microbatches", 1)
+
+        t0 = time.monotonic()
+        compiled = lowered.compile()
+        res.compile_s = time.monotonic() - t0
+
+        ca = compiled.cost_analysis() or {}
+        res.flops = float(ca.get("flops", 0.0))
+        res.bytes_accessed = float(ca.get("bytes accessed", 0.0))
+
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            res.argument_bytes = float(
+                getattr(ma, "argument_size_in_bytes", 0))
+            res.output_bytes = float(getattr(ma, "output_size_in_bytes", 0))
+            res.temp_bytes = float(getattr(ma, "temp_size_in_bytes", 0))
+            res.peak_memory_per_device = (
+                res.argument_bytes + res.temp_bytes)
+
+        if with_hlo_stats:
+            txt = compiled.as_text()
+            stats = hlo_stats.analyze(txt)
+            res.collectives = stats["collectives"]
+            res.hlo_flops = stats["hlo_flops"]
+            res.hlo_bytes = stats["hlo_bytes"]
+        res.ok = True
+    except Exception as e:  # noqa: BLE001 — recorded, cell marked failed
+        res.error = f"{type(e).__name__}: {e}"[:2000]
+    return res
+
+
+def save_result(res: CellResult, out_dir: str) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir,
+                        f"{res.arch}__{res.shape}__{res.mesh}.json")
+    with open(path, "w") as f:
+        json.dump(res.to_json(), f, indent=1)
+    return path

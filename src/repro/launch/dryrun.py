@@ -1,0 +1,83 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count at init.
+"""Multi-pod dry-run entrypoint.
+
+Lowers + compiles every (architecture x input-shape) cell against the
+single-pod 16x16 mesh and the 2x16x16 multi-pod mesh, printing
+memory_analysis / cost_analysis and writing one JSON artifact per cell
+(consumed by launch.roofline and EXPERIMENTS.md §Dry-run).
+
+Usage:
+  python -m repro.launch.dryrun --arch stablelm_12b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+import argparse
+import sys
+
+import jax
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default="experiments/dryrun")
+    ap.add_argument("--remat", type=str, default="nothing")
+    ap.add_argument("--mb-per-device", type=int, default=1)
+    ap.add_argument("--no-hlo-stats", action="store_true")
+    ap.add_argument("--serve-replicate-embed", action="store_true",
+                    help="§Perf variant: replicate FSDP dims at serve")
+    args = ap.parse_args()
+
+    assert jax.device_count() == 512, (
+        f"dry-run needs 512 placeholder devices, got {jax.device_count()}")
+
+    from repro import configs
+    from repro.launch import cell as cell_lib
+    from repro.launch.mesh import make_production_mesh
+
+    if args.all:
+        cells = configs.all_cells()
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi", make_production_mesh(multi_pod=True)))
+
+    n_fail = 0
+    for arch_id, shape_name in cells:
+        for mesh_name, mesh in meshes:
+            res = cell_lib.run_cell(
+                arch_id, shape_name, mesh, mesh_name,
+                microbatch_per_device=args.mb_per_device,
+                remat=args.remat,
+                with_hlo_stats=not args.no_hlo_stats,
+                serve_replicate_embed=args.serve_replicate_embed)
+            path = cell_lib.save_result(res, args.out)
+            n_dev = 512 if mesh_name == "multi" else 256
+            if res.ok:
+                coll = (res.collectives or {}).get("total", {})
+                print(f"OK   {arch_id:18s} {shape_name:12s} {mesh_name:6s} "
+                      f"lower={res.lower_s:6.1f}s compile={res.compile_s:6.1f}s "
+                      f"flops/dev={res.flops:.3e} bytes/dev={res.bytes_accessed:.3e} "
+                      f"peakmem/dev={res.peak_memory_per_device/2**30:.2f}GiB "
+                      f"collbytes/dev={coll.get('operand_bytes', 0):.3e} "
+                      f"-> {path}", flush=True)
+            else:
+                n_fail += 1
+                print(f"FAIL {arch_id:18s} {shape_name:12s} {mesh_name:6s} "
+                      f"{res.error}", flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,401 @@
+"""Post-SPMD HLO text analysis: trip-scaled flops / bytes / collectives.
+
+XLA's ``compiled.cost_analysis()`` reports *per-device* flops/bytes and
+counts while-loop bodies ONCE (verified empirically on this jax build),
+so this module re-derives the roofline inputs from the HLO text itself,
+multiplying every instruction by the trip counts of its enclosing while
+loops (the layer scan, the microbatch scan, the query-chunk scan ...).
+
+Trip counts come from each while's condition computation: lax.scan
+lowers to ``compare(counter, constant(N)), direction=LT`` with a 0-based
+counter, so the s32 constant is the trip count. Multipliers propagate
+through the call graph: while bodies (x trips), fusion ``calls=``,
+``to_apply=``, and conditional branches (x1).
+
+Derived quantities (all per device):
+  hlo_flops  — Σ over dot ops: mult · 2 · |result| · |contracted dims|
+               (convolutions are negligible in these models: the mamba
+               depthwise conv is lowered to shifted multiply-adds).
+  hlo_bytes  — Σ over *materialized* ops: mult · (output + operand bytes).
+               Fusion bodies are skipped (their intermediates live in
+               registers/VMEM); the fusion call site's operands + output
+               are what cross HBM. Tuple plumbing/parameters excluded.
+  collectives — per-type counts + two byte conventions:
+       operand_bytes — printed input-operand sizes (the spec convention);
+       wire_bytes    — ring-algorithm per-device traffic:
+           all-gather (g-1)/g·out | all-reduce 2·(g-1)/g·out |
+           reduce-scatter (g-1)·out | all-to-all (g-1)/g·out |
+           collective-permute out
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_START_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\), condition=%([\w.\-]+), body=%([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%([\w.\-]+)")
+_BRANCH_RE = re.compile(
+    r"(?:true_computation|false_computation|branch_computations)="
+    r"\{?%?([\w.\-]+(?:,\s*%[\w.\-]+)*)\}?")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_DOT_OPERANDS_RE = re.compile(r"dot\(%([\w.\-]+), %([\w.\-]+)\)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+_PARAM_N_RE = re.compile(r"parameter\((\d+)\)")
+
+_SKIP_BYTES_OPS = {"parameter", "tuple", "get-tuple-element", "constant",
+                   "bitcast", "after-all", "partition-id", "replica-id",
+                   "while", "conditional", "call", "copy-done",
+                   "all-gather-done", "all-reduce-done", "broadcast",
+                   "iota"}
+
+
+def _first_shape(result_part: str) -> Tuple[Optional[str], List[int]]:
+    m = _SHAPE_RE.search(result_part)
+    if not m:
+        return None, []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+def _shape_bytes(result_part: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(result_part):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))            # [num_groups, group_size]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _operand_names(line: str, opcode: str) -> List[str]:
+    """Operand instruction names of a call, tolerant of /*index=N*/
+    comments that XLA injects into long operand lists."""
+    parts = line.split(f" {opcode}(", 1)
+    if len(parts) != 2:
+        return []
+    inner = parts[1].split(")", 1)[0]
+    return _NAME_RE.findall(inner)
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.lines: List[str] = []
+        # instr name -> (dtype, dims, opcode)
+        self.symbols: Dict[str, Tuple[Optional[str], List[int], str]] = {}
+        # param index -> instr name
+        self.params: Dict[int, str] = {}
+
+    def index(self):
+        for line in self.lines:
+            m = _INSTR_RE.match(line)
+            if m:
+                name, result, opcode = m.group(1), m.group(2), m.group(3)
+                dt, dims = _first_shape(result)
+                self.symbols[name] = (dt, dims, opcode)
+                if opcode == "parameter":
+                    pm = _PARAM_N_RE.search(line)
+                    if pm:
+                        self.params[int(pm.group(1))] = name
+
+    def size_of(self, name: str) -> float:
+        sym = self.symbols.get(name)
+        if not sym or sym[0] not in _DTYPE_BYTES:
+            return 0.0
+        n = 1
+        for d in sym[1]:
+            n *= d
+        return n * _DTYPE_BYTES[sym[0]]
+
+    _PASSTHROUGH = {"bitcast", "copy", "convert", "reshape", "transpose",
+                    "get-tuple-element"}
+
+    def param_charges(self) -> Dict[int, float]:
+        """For fusion bodies: bytes actually READ from each parameter,
+        traced through pass-through ops. A parameter reaching only
+        (dynamic-)slice ops contributes the slice outputs (carried-stack
+        reads one layer per iteration); one reaching only a dynamic-
+        update-slice *target* slot aliases in place and contributes 0;
+        anything else reads in full."""
+        # consumers: value name -> [(opcode, out_bytes, operand_pos, name)]
+        consumers: Dict[str, List] = {}
+        for line in self.lines:
+            m = _INSTR_RE.match(line)
+            if not m or m.group(3) == "parameter":
+                continue
+            opcode, out_b = m.group(3), _shape_bytes(m.group(2))
+            for pos, op in enumerate(_operand_names(line, opcode)):
+                consumers.setdefault(op, []).append(
+                    (opcode, out_b, pos, m.group(1)))
+
+        def charge(vname: str, depth: int = 0) -> Optional[float]:
+            """bytes read from value v; None => read in full."""
+            if depth > 8:
+                return None
+            total = 0.0
+            for opcode, out_b, pos, cname in consumers.get(vname, []):
+                if opcode in self._PASSTHROUGH:
+                    sub = charge(cname, depth + 1)
+                    if sub is None:
+                        return None
+                    total += sub
+                elif opcode in ("dynamic-slice", "slice"):
+                    total += out_b
+                elif opcode == "dynamic-update-slice" and pos == 0:
+                    pass                     # in-place target
+                else:
+                    return None
+            return total
+
+        charges = {}
+        for i, pname in self.params.items():
+            c = charge(pname)
+            charges[i] = self.size_of(pname) if c is None else c
+        return charges
+
+
+def _split_computations(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    entry = ""
+    for line in text.splitlines():
+        m = _COMP_START_RE.match(line)
+        if m and not line.startswith(" "):
+            current = Computation(m.group(2))
+            comps[current.name] = current
+            if m.group(1):
+                entry = current.name
+            continue
+        if line.startswith("}"):
+            current = None
+            continue
+        if current is not None:
+            current.lines.append(line)
+    for c in comps.values():
+        c.index()
+    return comps, entry
+
+
+def _trip_count(comp: Optional[Computation]) -> Tuple[int, bool]:
+    if comp is None:
+        return 1, False
+    for line in comp.lines:
+        m = _CONST_RE.search(line)
+        if m:
+            return int(m.group(1)), True
+    return 1, False
+
+
+def _multipliers(comps: Dict[str, Computation], entry: str
+                 ) -> Tuple[Dict[str, float], bool]:
+    edges: Dict[str, List[Tuple[str, float]]] = {}
+    all_parsed = True
+    for name, comp in comps.items():
+        out: List[Tuple[str, float]] = []
+        for line in comp.lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trips, ok = _trip_count(comps.get(cond))
+                all_parsed = all_parsed and ok
+                out.append((body, float(trips)))
+                continue
+            cm = _CALLS_RE.search(line)
+            if cm:
+                out.append((cm.group(1), 1.0))
+            bm = _BRANCH_RE.search(line)
+            if bm:
+                for b in bm.group(1).replace("%", "").split(","):
+                    out.append((b.strip(), 1.0))
+        edges[name] = out
+
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float, depth: int = 0):
+        if name not in comps or depth > 64:
+            return
+        if mult.get(name, 0.0) >= m:
+            return
+        mult[name] = m
+        for child, f in edges.get(name, []):
+            visit(child, m * f, depth + 1)
+
+    if entry:
+        visit(entry, 1.0)
+    for name in comps:
+        mult.setdefault(name, 1.0)
+    return mult, all_parsed
+
+
+def analyze(text: str) -> Dict:
+    """One-pass full analysis: flops, bytes, collectives, op census."""
+    comps, entry = _split_computations(text)
+    mult, trips_parsed = _multipliers(comps, entry)
+
+    # computations invoked as fusion/reduction bodies: intermediates live
+    # in registers — only the call site's operands/output touch HBM.
+    fused_bodies = set()
+    for comp in comps.values():
+        for line in comp.lines:
+            cm = _CALLS_RE.search(line)
+            if cm:
+                fused_bodies.add(cm.group(1))
+
+    flops = 0.0
+    bytes_rw = 0.0
+    per_type: Dict[str, Dict[str, float]] = {
+        op: {"count": 0.0, "operand_bytes": 0.0, "wire_bytes": 0.0}
+        for op in COLLECTIVE_OPS}
+    op_census: Dict[str, float] = {}
+
+    for name, comp in comps.items():
+        m = mult.get(name, 1.0)
+        count_bytes = name not in fused_bodies
+        for line in comp.lines:
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            iname, result, opcode = im.group(1), im.group(2), im.group(3)
+            op_census[opcode] = op_census.get(opcode, 0.0) + m
+
+            # ---- bytes: output write + operand reads, at call sites only
+            if count_bytes and opcode not in _SKIP_BYTES_OPS:
+                out_b = _shape_bytes(result)
+                op_names = _operand_names(line, opcode)
+                op_bytes = [comp.size_of(o) for o in op_names]
+
+                # fusion bodies tell us how much of each operand is
+                # actually read (dynamic-slice of a carried stack reads
+                # one slice; a dynamic-update-slice target aliases in
+                # place and reads nothing)
+                if opcode == "fusion":
+                    cm = _CALLS_RE.search(line)
+                    body = comps.get(cm.group(1)) if cm else None
+                    if body is not None:
+                        charges = body.param_charges()
+                        op_bytes = [
+                            min(op_bytes[i], charges.get(i, op_bytes[i]))
+                            for i in range(len(op_bytes))]
+                        # in-place update: output aliases the big operand
+                        has_dus = any(s[2] == "dynamic-update-slice"
+                                      for s in body.symbols.values())
+                        if has_dus and out_b >= max(op_bytes + [1.0]):
+                            out_b = sum(op_bytes)      # writes ≈ reads
+                elif opcode == "dynamic-update-slice" and op_bytes:
+                    small = sum(op_bytes) - max(op_bytes)
+                    op_bytes = [small]
+                    out_b = small
+                elif opcode in ("dynamic-slice", "slice") and op_bytes:
+                    op_bytes = [out_b]
+                bytes_rw += m * (out_b + sum(op_bytes))
+
+            # ---- dot flops
+            if opcode == "dot":
+                dt, rdims = _first_shape(result)
+                dm = _DOT_OPERANDS_RE.search(line)
+                cm = _LHS_CONTRACT_RE.search(line)
+                contracted = 1
+                if dm and cm and cm.group(1):
+                    lhs = comp.symbols.get(dm.group(1))
+                    if lhs:
+                        for d in cm.group(1).split(","):
+                            di = int(d)
+                            if di < len(lhs[1]):
+                                contracted *= lhs[1][di]
+                rsize = 1
+                for d in rdims:
+                    rsize *= d
+                flops += m * 2.0 * rsize * contracted
+
+            # ---- collectives
+            base = opcode[:-6] if opcode.endswith("-start") else opcode
+            if base in COLLECTIVE_OPS and not opcode.endswith("-done"):
+                out_b = _shape_bytes(result)
+                g = _group_size(line)
+                if base == "all-gather":
+                    operand = out_b / max(g, 1)
+                    wire = out_b * (g - 1) / max(g, 1)
+                elif base == "all-reduce":
+                    operand = out_b
+                    wire = 2 * out_b * (g - 1) / max(g, 1)
+                elif base == "reduce-scatter":
+                    operand = out_b * g
+                    wire = out_b * (g - 1)
+                elif base == "all-to-all":
+                    operand = out_b
+                    wire = out_b * (g - 1) / max(g, 1)
+                else:
+                    operand = out_b
+                    wire = out_b
+                d = per_type[base]
+                d["count"] += m
+                d["operand_bytes"] += m * operand
+                d["wire_bytes"] += m * wire
+
+    totals = {
+        "count": sum(d["count"] for d in per_type.values()),
+        "operand_bytes": sum(d["operand_bytes"] for d in per_type.values()),
+        "wire_bytes": sum(d["wire_bytes"] for d in per_type.values()),
+    }
+    top_ops = dict(sorted(op_census.items(), key=lambda kv: -kv[1])[:20])
+    return {
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_rw,
+        "collectives": {"per_type": per_type, "total": totals,
+                        "trip_counts_parsed": trips_parsed},
+        "op_census_top": top_ops,
+    }
+
+
+def collective_stats(text: str) -> Dict:
+    return analyze(text)["collectives"]
+
+
+def loop_multipliers(text: str) -> Dict[str, float]:
+    comps, entry = _split_computations(text)
+    mult, _ = _multipliers(comps, entry)
+    return mult
+
+
+def scaled_instruction_count(text: str, opcode: str) -> float:
+    """Trip-count-scaled occurrences of an opcode — used by the perf loop
+    to spot remat recompute and redundant collectives."""
+    comps, entry = _split_computations(text)
+    mult, _ = _multipliers(comps, entry)
+    total = 0.0
+    for name, comp in comps.items():
+        m = mult.get(name, 1.0)
+        for sym, (dt, dims, op) in comp.symbols.items():
+            if op == opcode:
+                total += m
+    return total

@@ -1,0 +1,29 @@
+"""Production meshes. TPU v5e pod = 16x16 = 256 chips; the multi-pod
+mesh adds a leading DCN-connected "pod" axis (2 pods = 512 chips).
+
+Functions, not module constants — importing this module never touches
+jax device state (device count is locked at first jax init, and only
+the dry-run entrypoint forces 512 host devices)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 1, model: int = 1, pod: int = 0) -> Mesh:
+    """Small meshes for unit tests (requires enough local devices)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# Hardware constants (TPU v5e) used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link

@@ -1,0 +1,149 @@
+"""Roofline analysis over dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh) cell, all in seconds-per-step:
+
+  compute    = flops_per_device            / PEAK_FLOPS_BF16
+  memory     = hbm_bytes_per_device        / HBM_BW
+  collective = collective_bytes_per_device / ICI_BW
+
+where flops/bytes come from ``compiled.cost_analysis()`` (per-device,
+while-bodies scaled by trip counts — see hlo_stats) and collective bytes
+from the HLO text parse. The dominant term is the bottleneck; the
+utilization column is compute/max(all) — the fraction of peak the chip
+would sustain if the model were perfectly overlapped, i.e. the roofline
+fraction reported in §Perf.
+
+MODEL_FLOPS sanity column: 6·N·D for train (N params — active params for
+MoE — D tokens), 2·N·D for forward-only cells, per device; the ratio
+model/HLO catches remat waste and redundant compute (useful < 1 means
+the compiled program does more dot-flops than the model needs: remat
+recompute, replicated attention under dropped TP rules, MoE dispatch).
+
+NOTE: XLA's cost_analysis counts while bodies once, so flops/bytes are
+re-derived from the HLO text with per-computation trip-count multipliers
+(launch.hlo_stats — validated to match analytic flop counts exactly on
+scanned matmul programs). The raw cost_analysis values remain in the
+artifacts (--raw to view).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str
+    chips: int
+    flops_dev: float          # per device, loop-scaled
+    bytes_dev: float          # per device, loop-scaled
+    coll_bytes_dev: float     # per device (operand-size convention)
+    coll_wire_dev: float
+    model_flops_dev: float
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    roofline_frac: float = 0.0
+    useful_ratio: float = 0.0
+
+    def finish(self):
+        self.compute_s = self.flops_dev / PEAK_FLOPS_BF16
+        self.memory_s = self.bytes_dev / HBM_BW
+        self.collective_s = self.coll_bytes_dev / ICI_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.dominant = max(terms, key=terms.get)
+        tmax = max(terms.values())
+        self.roofline_frac = (self.compute_s / tmax) if tmax > 0 else 0.0
+        self.useful_ratio = (self.model_flops_dev / self.flops_dev
+                             if self.flops_dev else 0.0)
+        return self
+
+
+def model_flops_per_device(arch_id: str, shape_name: str, chips: int
+                           ) -> float:
+    """6·N·D (train) / 2·N·D (fwd) global, divided by chips."""
+    from repro import configs
+    from repro.models import lm
+    cfg = configs.get(arch_id)
+    shape = configs.SHAPES[shape_name]
+    n_active = lm.active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / chips
+
+
+def load_rows(dryrun_dir: str, use_hlo: bool = True) -> List[RooflineRow]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if not d.get("ok"):
+            continue
+        chips = 512 if d["mesh"] == "multi" else 256
+        coll = (d.get("collectives") or {}).get("total", {})
+        mf = model_flops_per_device(d["arch"], d["shape"], chips)
+        # trip-scaled HLO-text numbers (validated against analytic flops);
+        # cost_analysis values count while bodies once and are kept in the
+        # JSON artifacts for reference only.
+        flops = d.get("hlo_flops") or d["flops"]
+        bytes_dev = d.get("hlo_bytes") or d["bytes_accessed"]
+        if not use_hlo:
+            flops, bytes_dev = d["flops"], d["bytes_accessed"]
+        rows.append(RooflineRow(
+            arch=d["arch"], shape=d["shape"], mesh=d["mesh"],
+            kind=d["kind"], chips=chips, flops_dev=flops,
+            bytes_dev=bytes_dev,
+            coll_bytes_dev=coll.get("operand_bytes", 0.0),
+            coll_wire_dev=coll.get("wire_bytes", 0.0),
+            model_flops_dev=mf).finish())
+    return rows
+
+
+def fmt_table(rows: List[RooflineRow]) -> str:
+    hdr = (f"{'arch':20s} {'shape':12s} {'mesh':6s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'collect_s':>10s} "
+           f"{'dominant':>10s} {'roofl%':>7s} {'useful':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:20s} {r.shape:12s} {r.mesh:6s} "
+            f"{r.compute_s:10.4f} {r.memory_s:10.4f} {r.collective_s:10.4f} "
+            f"{r.dominant:>10s} {100*r.roofline_frac:6.1f}% "
+            f"{r.useful_ratio:6.2f}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--json-out", default=None)
+    ap.add_argument("--raw", action="store_true",
+                    help="use raw cost_analysis numbers (loop bodies x1)")
+    args = ap.parse_args()
+    rows = load_rows(args.dir, use_hlo=not args.raw)
+    print(fmt_table(rows))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump([r.__dict__ for r in rows], f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

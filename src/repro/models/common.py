@@ -1,0 +1,222 @@
+"""Shared model building blocks: norms, activations, rotary embeddings,
+initializers, and the logical-axis annotation convention.
+
+Every ``init_*`` helper returns ``(params, axes)`` where ``axes`` is a
+pytree of the same structure whose leaves are tuples of *logical axis
+names* (one per tensor dim). The sharding planner (``repro.runtime.
+sharding``) maps logical names -> mesh axes with divisibility checks.
+
+Logical axis vocabulary:
+  "layers"   stacked-layer leading dim (scan axis, never sharded)
+  "vocab"    vocabulary dim            -> "model"
+  "embed"    d_model dim               -> fsdp axes ("data" [, "pod"])
+  "heads"    flattened q-head dim      -> "model" (if divisible)
+  "kv"       flattened kv-head dim     -> "model" (if divisible)
+  "ffn"      feed-forward hidden dim   -> "model"
+  "experts"  MoE expert dim            -> "model"
+  "ssm"      mamba inner dim           -> "model"
+  null (None) unsharded dim
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def is_axes_leaf(x) -> bool:
+    """A logical-axes annotation: plain tuple of str/None. Excludes
+    namedtuples (KVCache, MambaCache, …) which are pytree containers."""
+    return (isinstance(x, tuple) and not hasattr(x, "_fields")
+            and all(a is None or isinstance(a, str) for a in x))
+
+
+# ------------------------------------------------------------------
+# Config
+# ------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One architecture from the assignment (full or reduced)."""
+
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    act: str = "swiglu"          # swiglu | relu2 | gelu
+    rope: str = "rope"           # rope | mrope | none
+    rope_theta: float = 10_000.0
+    mrope_sections: Tuple[int, int, int] = (0, 0, 0)
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    shared_ff: int = 0           # total d_ff of the shared-expert branch
+    capacity_factor: float = 1.25
+    moe_group: int = 1024        # tokens per dispatch group (sort-free MoE)
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    # hybrid (zamba2): one *shared* attention block applied every k layers
+    attn_every: int = 0
+    # misc
+    causal: bool = True
+    input_mode: str = "tokens"   # tokens | embeds (audio/vlm stub frontends)
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    q_chunk: int = 512           # query-chunked attention block size
+    kv_quant: bool = False       # int8 KV cache (beyond-paper serve opt)
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def d_q(self) -> int:
+        return self.n_heads * self.d_head
+
+    @property
+    def d_kv(self) -> int:
+        return self.n_kv * self.d_head
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def conv_dim(self) -> int:
+        # x-branch + B + C streams go through the depthwise conv (n_groups=1)
+        return self.d_inner + 2 * self.ssm_state
+
+    def with_(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ------------------------------------------------------------------
+# Initializers
+# ------------------------------------------------------------------
+
+def dense_init(key: Array, shape: Tuple[int, ...], in_dim: int, dtype) -> Array:
+    """Truncated-normal fan-in init (LLM-standard)."""
+    scale = in_dim ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key: Array, shape: Tuple[int, ...], dtype) -> Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ------------------------------------------------------------------
+# Norms / activations
+# ------------------------------------------------------------------
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def activation(x: Array, kind: str) -> Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu2":            # nemotron-4 squared ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {kind}")
+
+
+# ------------------------------------------------------------------
+# Rotary embeddings (RoPE and Qwen2-VL M-RoPE)
+# ------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x (B, S, H, dh); positions (B, S) int32. Split-half convention."""
+    b, s, h, dh = x.shape
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, dh/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions: Array, theta: float,
+                sections: Tuple[int, int, int]) -> Array:
+    """Qwen2-VL multimodal RoPE. positions (B, S, 3) = (t, h, w) ids;
+    rotary frequency groups are split across the three streams
+    (sections sum to dh/2). For text tokens all three ids coincide and
+    M-RoPE reduces exactly to 1-D RoPE."""
+    b, s, h, dh = x.shape
+    freqs = rope_freqs(dh, theta)                        # (dh/2,)
+    ang3 = positions.astype(jnp.float32)[:, :, None, :] * freqs[None, None, :, None]
+    # select which stream drives each frequency                        (B,S,dh/2,3)
+    sec = jnp.concatenate([
+        jnp.full((n,), i, jnp.int32) for i, n in enumerate(sections)])
+    ang = jnp.take_along_axis(ang3, sec[None, None, :, None].astype(jnp.int32),
+                              axis=-1)[..., 0]           # (B, S, dh/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def positions_for(cfg: ArchConfig, batch: int, seq: int,
+                  offset: int | Array = 0) -> Array:
+    """Default position ids (text stream). M-RoPE gets (B,S,3)."""
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.rope == "mrope":
+        return jnp.broadcast_to(pos[..., None], (batch, seq, 3))
+    return pos
+
+
+def rotate(cfg: ArchConfig, x: Array, positions: Array) -> Array:
+    if cfg.rope == "rope":
+        return apply_rope(x, positions, cfg.rope_theta)
+    if cfg.rope == "mrope":
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return x
+
+
+# ------------------------------------------------------------------
+# Cross-entropy (vocab-sharding friendly: logits stay (…, V))
+# ------------------------------------------------------------------
+
+def softmax_xent(logits: Array, labels: Array, mask: Optional[Array] = None
+                 ) -> Array:
+    """Mean next-token CE. logits (B,S,V) any float dtype, labels (B,S).
+
+    One-hot (multiply+reduce) label pick instead of take_along_axis so a
+    vocab-sharded logits tensor never gets gathered: both the logsumexp
+    and the label-select lower to sharded reductions + tiny all-reduces
+    under GSPMD."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_ids = jnp.arange(logits.shape[-1], dtype=jnp.int32)
+    onehot = (labels[..., None].astype(jnp.int32) == vocab_ids)
+    ll = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = lse - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,204 @@
+"""Mamba-2 block via SSD (state-space duality, arXiv:2405.21060).
+
+Chunked algorithm: the sequence is split into chunks of ``cfg.ssm_chunk``;
+within a chunk the SSD quadratic (attention-like) form runs on the MXU,
+and a lax.scan carries the (B, H, P, N) recurrent state across chunks.
+Live memory is O(chunk^2) + the carried state — never O(S^2) — which is
+what makes the 500k-token cells feasible.
+
+Projections are kept *separate* (z / x / B / C / dt) rather than one fused
+in_proj: each output dim then has a clean logical axis so the TP planner
+can shard d_inner over "model" without slicing through a sharded dim
+(numerically identical to the fused layout).
+
+Decode is the O(1)-per-token recurrent form with a rolling depthwise-conv
+window; the cache is sequence-length independent.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packed_model import linear
+from repro.models.common import ArchConfig, dense_init, rms_norm
+
+Array = jax.Array
+
+
+def mamba_axes() -> dict:
+    return {
+        "in_z": ("embed", "ssm"), "in_x": ("embed", "ssm"),
+        "in_b": ("embed", None), "in_c": ("embed", None),
+        "in_dt": ("embed", "ssm_heads"),
+        "conv_x": ("ssm", None), "conv_b": (None, None), "conv_c": (None, None),
+        "a_log": ("ssm_heads",), "d_skip": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",), "gate_norm": ("ssm",),
+        "out": ("ssm", "embed"),
+    }
+
+
+def init_mamba(cfg: ArchConfig, key: Array):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    k = cfg.ssm_conv
+    ks = jax.random.split(key, 10)
+    p = {
+        "in_z": dense_init(ks[0], (d, di), d, cfg.dtype),
+        "in_x": dense_init(ks[1], (d, di), d, cfg.dtype),
+        "in_b": dense_init(ks[2], (d, n), d, cfg.dtype),
+        "in_c": dense_init(ks[3], (d, n), d, cfg.dtype),
+        "in_dt": dense_init(ks[4], (d, h), d, jnp.float32),
+        "conv_x": dense_init(ks[5], (di, k), k, cfg.dtype),
+        "conv_b": dense_init(ks[6], (n, k), k, cfg.dtype),
+        "conv_c": dense_init(ks[7], (n, k), k, cfg.dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "gate_norm": jnp.ones((di,), jnp.float32),
+        "out": dense_init(ks[8], (di, d), di, cfg.dtype),
+    }
+    return p, mamba_axes()
+
+
+def _causal_conv(x: Array, w: Array) -> Array:
+    """Depthwise causal conv. x (B, S, C), w (C, K)."""
+    b, s, c = x.shape
+    k = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # sum_k w[:, k] * x[t - (K-1) + k]  — small K, unrolled adds.
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i:i + s, :] * w[None, None, :, i].astype(x.dtype)
+    return out
+
+
+def _ssd_chunk_scan(x: Array, dt: Array, a: Array, bmat: Array, cmat: Array,
+                    chunk: int, h0: Array | None = None
+                    ) -> Tuple[Array, Array]:
+    """Chunked SSD. x (B,S,H,P), dt (B,S,H) >0, a (H,) <0,
+    bmat/cmat (B,S,N). Returns (y (B,S,H,P), final state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = bmat.shape[-1]
+    nc = max(s // chunk, 1)
+    if s % chunk:
+        chunk, nc = s, 1
+
+    def to_chunks(t):
+        return t.reshape(bsz, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xc, dtc = to_chunks(x.astype(jnp.float32)), to_chunks(dt)
+    bc, cc = to_chunks(bmat.astype(jnp.float32)), to_chunks(cmat.astype(jnp.float32))
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(hstate, inp):
+        x_c, dt_c, b_c, c_c = inp            # (B,L,H,P) (B,L,H) (B,L,N) (B,L,N)
+        da = dt_c * a[None, None, :]          # (B,L,H)  <= 0
+        da_cum = jnp.cumsum(da, axis=1)       # (B,L,H)
+        dtx = x_c * dt_c[..., None]           # (B,L,H,P)
+
+        # intra-chunk (quadratic / attention-like form)
+        cb = jnp.einsum("bin,bjn->bij", c_c, b_c)            # (B,L,L)
+        diff = da_cum[:, :, None, :] - da_cum[:, None, :, :]  # (B,i,j,H)
+        ii = jnp.arange(chunk)
+        causal = (ii[:, None] >= ii[None, :])[None, :, :, None]
+        lmat = jnp.where(causal, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+        y_diag = jnp.einsum("bij,bijh,bjhp->bihp", cb, lmat, dtx)
+
+        # inter-chunk contribution from carried state
+        y_off = jnp.einsum("bin,bhpn->bihp", c_c, hstate) * \
+            jnp.exp(da_cum)[..., None]
+
+        # state update
+        total = da_cum[:, -1, :]                              # (B,H)
+        decay_to_end = jnp.exp(total[:, None, :] - da_cum)    # (B,L,H)
+        h_new = hstate * jnp.exp(total)[:, :, None, None] + \
+            jnp.einsum("bjhp,bjn,bjh->bhpn", dtx, b_c, decay_to_end)
+        return h_new, y_diag + y_off
+
+    h_final, yc = jax.lax.scan(step, h0, (xc, dtc, bc, cc))
+    y = yc.swapaxes(0, 1).reshape(bsz, s, h, p)
+    return y, h_final
+
+
+def mamba_block(cfg: ArchConfig, p: dict, x: Array) -> Array:
+    """Full-sequence SSD block. x (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    h, pd, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    z = linear(x, p["in_z"])
+    xs = jax.nn.silu(_causal_conv(linear(x, p["in_x"]), p["conv_x"]))
+    bmat = jax.nn.silu(_causal_conv(x @ p["in_b"], p["conv_b"]))
+    cmat = jax.nn.silu(_causal_conv(x @ p["in_c"], p["conv_c"]))
+    dt = jax.nn.softplus(x.astype(jnp.float32) @ p["in_dt"] + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    xh = xs.reshape(b, s, h, pd)
+    y, _ = _ssd_chunk_scan(xh, dt, a, bmat, cmat, cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, cfg.d_inner).astype(cfg.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return linear(y, p["out"])
+
+
+# ------------------------------------------------------------------
+# Decode path (O(1) per token)
+# ------------------------------------------------------------------
+
+class MambaCache(NamedTuple):
+    conv_x: Array   # (B, K-1, d_inner) rolling window
+    conv_b: Array   # (B, K-1, N)
+    conv_c: Array   # (B, K-1, N)
+    h: Array        # (B, H, P, N) recurrent state, f32
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int) -> MambaCache:
+    k = cfg.ssm_conv
+    return MambaCache(
+        jnp.zeros((batch, k - 1, cfg.d_inner), cfg.dtype),
+        jnp.zeros((batch, k - 1, cfg.ssm_state), cfg.dtype),
+        jnp.zeros((batch, k - 1, cfg.ssm_state), cfg.dtype),
+        jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+                  jnp.float32),
+    )
+
+
+def mamba_cache_axes() -> MambaCache:
+    return MambaCache(("batch", None, "ssm"), ("batch", None, None),
+                      ("batch", None, None), ("batch", "ssm_heads", None, None))
+
+
+def _conv_step(window: Array, x_new: Array, w: Array
+               ) -> Tuple[Array, Array]:
+    """window (B, K-1, C), x_new (B, C) -> (new window, conv output (B, C))."""
+    full = jnp.concatenate([window, x_new[:, None, :]], axis=1)  # (B, K, C)
+    out = jnp.einsum("bkc,ck->bc", full, w.astype(x_new.dtype))
+    return full[:, 1:, :], out
+
+
+def mamba_decode_step(cfg: ArchConfig, p: dict, x: Array, cache: MambaCache
+                      ) -> Tuple[Array, MambaCache]:
+    """x (B, 1, D) -> (y (B, 1, D), cache')."""
+    b = x.shape[0]
+    xt = x[:, 0, :]
+    h, pd, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    z = linear(xt, p["in_z"])
+    wx, xconv = _conv_step(cache.conv_x, linear(xt, p["in_x"]), p["conv_x"])
+    wb, bconv = _conv_step(cache.conv_b, xt @ p["in_b"], p["conv_b"])
+    wc, cconv = _conv_step(cache.conv_c, xt @ p["in_c"], p["conv_c"])
+    xs = jax.nn.silu(xconv).reshape(b, h, pd).astype(jnp.float32)
+    bvec = jax.nn.silu(bconv).astype(jnp.float32)                 # (B, N)
+    cvec = jax.nn.silu(cconv).astype(jnp.float32)                 # (B, N)
+    dt = jax.nn.softplus(xt.astype(jnp.float32) @ p["in_dt"] + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])                                      # (H,)
+
+    da = jnp.exp(dt * a[None, :])                                 # (B, H)
+    dtx = xs * dt[..., None]                                      # (B, H, P)
+    h_new = cache.h * da[:, :, None, None] + \
+        dtx[..., None] * bvec[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", h_new, cvec) + \
+        xs * p["d_skip"][None, :, None]
+    y = y.reshape(b, cfg.d_inner).astype(cfg.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return linear(y, p["out"])[:, None, :], MambaCache(wx, wb, wc, h_new)

@@ -1,0 +1,47 @@
+"""Feed-forward blocks: gated (SwiGLU) and plain (GELU / squared-ReLU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packed_model import linear
+from repro.models.common import ArchConfig, activation, dense_init
+
+Array = jax.Array
+
+
+def is_gated(act: str) -> bool:
+    return act == "swiglu"
+
+
+def mlp_axes(cfg: ArchConfig) -> dict:
+    if is_gated(cfg.act):
+        return {"w_gate": ("embed", "ffn"), "w_up": ("embed", "ffn"),
+                "w_down": ("ffn", "embed")}
+    return {"w_up": ("embed", "ffn"), "w_down": ("ffn", "embed")}
+
+
+def init_mlp(cfg: ArchConfig, key: Array, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if is_gated(cfg.act):
+        p = {
+            "w_gate": dense_init(ks[0], (d, f), d, cfg.dtype),
+            "w_up": dense_init(ks[1], (d, f), d, cfg.dtype),
+            "w_down": dense_init(ks[2], (f, d), f, cfg.dtype),
+        }
+    else:
+        p = {
+            "w_up": dense_init(ks[0], (d, f), d, cfg.dtype),
+            "w_down": dense_init(ks[1], (f, d), f, cfg.dtype),
+        }
+    return p, mlp_axes(cfg)
+
+
+def mlp(cfg: ArchConfig, p: dict, x: Array) -> Array:
+    if is_gated(cfg.act):
+        h = jax.nn.silu(linear(x, p["w_gate"])) * linear(x, p["w_up"])
+    else:
+        kind = "gelu" if cfg.act == "gelu" else "relu2"
+        h = activation(linear(x, p["w_up"]), kind)
+    return linear(h, p["w_down"])

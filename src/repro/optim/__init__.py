@@ -1,0 +1,5 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig, OptState, adamw_init, adamw_update, cosine_schedule,
+    global_norm_clip)
+from repro.optim.compress import (  # noqa: F401
+    int8_compress, int8_decompress, ef_compress_pytree, ef_decompress_pytree)

@@ -1,0 +1,86 @@
+"""AdamW + cosine schedule + global-norm clipping — pure-pytree, sharding
+transparent (optimizer state inherits parameter shardings; bf16 moments
+are the memory option the 340B config uses — DESIGN.md §5)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    moment_dtype: Any = jnp.float32     # bf16 option for the 340B config
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: Array
+
+
+def adamw_init(params: Any, cfg: AdamWConfig = AdamWConfig()) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return OptState(jax.tree.map(zeros, params), jax.tree.map(zeros, params),
+                    jnp.zeros((), jnp.int32))
+
+
+def cosine_schedule(cfg: AdamWConfig, step: Array) -> Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos)
+
+
+def global_norm_clip(grads: Any, clip: float) -> tuple[Any, Array]:
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, clip / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def adamw_update(grads: Any, state: OptState, params: Any,
+                 cfg: AdamWConfig = AdamWConfig()):
+    """Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = global_norm_clip(grads, cfg.clip_norm)
+    count = state.count + 1
+    lr = cosine_schedule(cfg, count)
+    c = count.astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** c
+    bc2 = 1 - cfg.b2 ** c
+
+    def upd(p, g, m, n):
+        m32, n32 = m.astype(jnp.float32), n.astype(jnp.float32)
+        m_new = cfg.b1 * m32 + (1 - cfg.b1) * g
+        n_new = cfg.b2 * n32 + (1 - cfg.b2) * g * g
+        step = (m_new / bc1) / (jnp.sqrt(n_new / bc2) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * (step + decay)
+        return (p_new.astype(p.dtype), m_new.astype(cfg.moment_dtype),
+                n_new.astype(cfg.moment_dtype))
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(new_mu, new_nu, count), metrics

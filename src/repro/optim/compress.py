@@ -1,0 +1,52 @@
+"""Int8 error-feedback gradient compression for the DP all-reduce.
+
+Used by the shard_map DDP train-step variant (runtime.ddp): each replica
+quantizes its local gradient to int8 with a per-tensor scale, all-reduces
+the int8 payload (8x less DP traffic), dequantizes, and folds the
+quantization error into the next step's gradient (error feedback keeps
+the scheme unbiased over time — standard 1-bit-Adam lineage result).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def int8_compress(g: Array) -> Tuple[Array, Array]:
+    """g float -> (int8 payload, f32 scale). Symmetric per-tensor."""
+    g32 = g.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(g32)) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: Array, scale: Array) -> Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_pytree(grads: Any, error: Any) -> Tuple[Any, Any, Any]:
+    """(grads+error) -> (int8 payloads, scales, new error buffers)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = int8_compress(corrected)
+        new_e = corrected - int8_decompress(q, s)
+        return q, s, new_e
+
+    out = jax.tree.map(one, grads, error)
+    q = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    s = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    e = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return q, s, e
+
+
+def ef_decompress_pytree(q: Any, s: Any) -> Any:
+    return jax.tree.map(int8_decompress, q, s)
+
+
+def init_error_buffers(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

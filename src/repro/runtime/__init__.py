@@ -1,0 +1,2 @@
+from repro.runtime.sharding import (  # noqa: F401
+    Planner, axis_constraints, logical_rules)

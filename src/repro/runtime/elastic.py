@@ -1,0 +1,48 @@
+"""Elastic scaling: restore a checkpoint onto a *different* mesh.
+
+The checkpoint format is mesh-agnostic (host numpy per leaf); the new
+job builds its own Planner for whatever mesh it was given and re-places
+every leaf with ``jax.device_put(arr, new_sharding)``. Growing 256 -> 512
+chips, shrinking, or changing the (data, model) split are all the same
+code path. Used by tests (save on mesh A, restore on mesh B, bitwise
+equality) and by launch/train.py --restore.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.models import lm
+from repro.models.common import ArchConfig
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.runtime.sharding import Planner
+
+
+def train_state_template(cfg: ArchConfig, acfg: AdamWConfig):
+    """Abstract {"params", "opt"} tree (the launcher's commit unit)."""
+    shapes, axes = lm.abstract_params(cfg)
+    opt_shapes = jax.eval_shape(lambda: adamw_init(shapes, acfg))
+    return {"params": shapes, "opt": opt_shapes}
+
+
+def train_state_shardings(cfg: ArchConfig, acfg: AdamWConfig, mesh: Mesh):
+    planner = Planner(mesh, cfg)
+    shapes, axes = lm.abstract_params(cfg)
+    p_sh = planner.tree_shardings(axes, shapes)
+    opt_shapes = jax.eval_shape(lambda: adamw_init(shapes, acfg))
+    opt_axes = type(opt_shapes)(axes, axes, ())
+    o_sh = planner.tree_shardings(opt_axes, opt_shapes)
+    return {"params": p_sh, "opt": o_sh}
+
+
+def elastic_restore(mgr: CheckpointManager, cfg: ArchConfig,
+                    acfg: AdamWConfig, mesh: Mesh,
+                    step: Optional[int] = None):
+    """Restore the {"params", "opt"} commit onto ``mesh`` (any shape),
+    resharding every leaf for the new topology."""
+    template = train_state_template(cfg, acfg)
+    shardings = train_state_shardings(cfg, acfg, mesh)
+    return mgr.restore(template, step=step, shardings=shardings)

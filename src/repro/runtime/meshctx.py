@@ -1,0 +1,67 @@
+"""Ambient mesh context so model code can drop sharding *hints* without
+carrying a mesh argument through every layer.
+
+Step builders / the dry-run enter ``with use_mesh(mesh):``; model code
+calls ``hint(x, names...)`` which becomes a with_sharding_constraint when
+a mesh is active (and every named dim divides), and a no-op otherwise —
+smoke tests on one CPU device never see a constraint.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "repro_mesh", default=None)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH.get()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    tok = _MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _MESH.reset(tok)
+
+
+def hint(x: jax.Array, *names) -> jax.Array:
+    """Constrain dim i of x to mesh axis names[i]; None leaves the dim
+    UNCONSTRAINED (GSPMD keeps whatever propagates). A name may be a
+    tuple of axis names (e.g. ("pod", "data") for the multi-pod batch
+    dim) — axes missing from the mesh are dropped from the tuple, and
+    the whole entry falls back to UNCONSTRAINED if the surviving axes do
+    not divide the dim."""
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    parts = []
+    any_named = False
+    for name, dim in zip(names, x.shape):
+        if name is None:
+            parts.append(P.UNCONSTRAINED)
+            continue
+        axes = name if isinstance(name, tuple) else (name,)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if axes and dim % n == 0:
+            parts.append(axes if len(axes) > 1 else axes[0])
+            any_named = True
+        else:
+            parts.append(P.UNCONSTRAINED)
+    if not any_named:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))
+
+
+DP = ("pod", "data")   # the batch/DP axes convention of this framework

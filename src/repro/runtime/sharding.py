@@ -1,0 +1,132 @@
+"""Divisibility-aware sharding planner: logical axes -> PartitionSpecs.
+
+Rules (train and serve share the 2-D layout — weights are FSDP x TP
+sharded; serve keeps 2-D because the 340B config cannot replicate over
+"data"; the §Perf hillclimb revisits this for small decode cells):
+
+  logical name  candidate mesh axes (first that divides wins)
+  ------------  -----------------------------------------------
+  vocab         ("model",)
+  embed         ("pod","data") -> ("data",)     [FSDP; ZeRO over pod]
+  heads/kv      ("model",)  with whole-head alignment (unit=d_head)
+  ffn           ("model",)
+  experts       ("model",)                      [EP]
+  ssm           ("model",)  unit=ssm_headdim
+  ssm_heads     ("model",)
+  batch         ("pod","data") -> ("data",)     [activations/caches]
+  kv_seq        ("model",)                      [SP flash-decode split]
+  layers        never sharded (scan axis)
+
+A rule applies only if the dim size divides by the product of the mesh
+axes AND the per-shard slice keeps logical units intact (e.g. a GQA
+llama3.2-3b has 24 q-heads: 24*128/16 leaves 192 ≡ 1.5 heads -> rule is
+dropped and attention replicates over "model" while its MLP still TP-
+shards — the documented degraded-but-correct fallback).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ArchConfig, is_axes_leaf
+
+AxisRule = Sequence[Tuple[str, ...]]     # candidates, in priority order
+
+
+def logical_rules(multi_pod: bool) -> Dict[str, AxisRule]:
+    fsdp = [("pod", "data"), ("data",)] if multi_pod else [("data",)]
+    return {
+        "vocab": [("model",)],
+        "embed": fsdp,
+        "heads": [("model",)],
+        "kv": [("model",)],
+        "ffn": [("model",)],
+        "experts": [("model",)],
+        "ssm": [("model",)],
+        "ssm_heads": [("model",)],
+        "batch": fsdp,
+        "kv_seq": [("model",)],
+        "layers": [],
+    }
+
+
+def axis_constraints(cfg: ArchConfig) -> Dict[str, int]:
+    """Units that must stay whole inside one shard."""
+    return {
+        "heads": cfg.d_head,
+        "kv": cfg.d_head,
+        "ssm": max(cfg.ssm_headdim, 1),
+    }
+
+
+class Planner:
+    def __init__(self, mesh: Mesh, cfg: ArchConfig,
+                 rules: Optional[Dict[str, AxisRule]] = None):
+        self.mesh = mesh
+        self.cfg = cfg
+        multi_pod = "pod" in mesh.axis_names
+        self.rules = rules if rules is not None else logical_rules(multi_pod)
+        self.units = axis_constraints(cfg)
+
+    def _pick(self, name: Optional[str], dim: int) -> Optional[Tuple[str, ...]]:
+        if name is None:
+            return None
+        for cand in self.rules.get(name, []):
+            if any(a not in self.mesh.axis_names for a in cand):
+                continue
+            n_shards = math.prod(self.mesh.shape[a] for a in cand)
+            if dim % n_shards:
+                continue
+            unit = self.units.get(name, 1)
+            if (dim // n_shards) % unit:
+                continue
+            return cand
+        return None
+
+    def spec(self, axes: Tuple[Optional[str], ...],
+             shape: Tuple[int, ...]) -> P:
+        assert len(axes) == len(shape), (axes, shape)
+        used: set = set()
+        parts = []
+        for name, dim in zip(axes, shape):
+            cand = self._pick(name, dim)
+            if cand is not None and not (set(cand) & used):
+                used.update(cand)
+                parts.append(cand if len(cand) > 1 else cand[0])
+            else:
+                parts.append(None)
+        return P(*parts)
+
+    def sharding(self, axes, shape) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(axes, shape))
+
+    # ---- pytree versions ------------------------------------------------
+
+    def tree_specs(self, axes_tree: Any, shapes_tree: Any) -> Any:
+        return jax.tree.map(
+            lambda ax, leaf: self.spec(ax, tuple(leaf.shape)),
+            axes_tree, shapes_tree, is_leaf=is_axes_leaf)
+
+    def tree_shardings(self, axes_tree: Any, shapes_tree: Any) -> Any:
+        specs = self.tree_specs(axes_tree, shapes_tree)
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    # ---- activations ----------------------------------------------------
+
+    def act_spec(self, *names: Optional[str], shape: Tuple[int, ...]) -> P:
+        return self.spec(tuple(names), shape)
+
+    def batch_axes(self) -> Tuple[str, ...]:
+        for cand in self.rules["batch"]:
+            if all(a in self.mesh.axis_names for a in cand):
+                return cand
+        return ()
+
+
+def constrain(x, mesh: Mesh, spec: P):
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

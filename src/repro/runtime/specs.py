@@ -1,0 +1,94 @@
+"""Abstract input/state specs for every (arch x shape) cell — ShapeDtype
+Struct stand-ins with shardings attached; nothing is ever allocated.
+This is what both the dry-run and the roofline analysis lower against.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeSpec
+from repro.models import lm
+from repro.models.common import ArchConfig
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.runtime.sharding import Planner
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def abstract_tree(planner: Planner, shapes_tree: Any, axes_tree: Any) -> Any:
+    """ShapeDtypeStruct pytree with NamedShardings from the planner."""
+    shardings = planner.tree_shardings(axes_tree, shapes_tree)
+    return jax.tree.map(
+        lambda leaf, sh: _sds(leaf.shape, leaf.dtype, sh),
+        shapes_tree, shardings)
+
+
+def abstract_params(cfg: ArchConfig, planner: Planner):
+    shapes, axes = lm.abstract_params(cfg)
+    return abstract_tree(planner, shapes, axes), axes
+
+
+def abstract_opt_state(cfg: ArchConfig, planner: Planner,
+                       acfg: AdamWConfig):
+    shapes, axes = lm.abstract_params(cfg)
+    opt_shapes = jax.eval_shape(lambda: adamw_init(shapes, acfg))
+    opt_axes = type(opt_shapes)(axes, axes, ())
+    return abstract_tree(planner, opt_shapes, opt_axes), opt_axes
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec, planner: Planner
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Training batch: inputs/labels (+ M-RoPE positions for vlm)."""
+    b, s = shape.global_batch, shape.seq_len
+    mesh = planner.mesh
+    dp = planner.batch_axes()
+    n_dp = 1
+    for a in (dp or ()):
+        n_dp *= mesh.shape[a]
+    bspec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    if n_dp == 0 or b % n_dp:
+        bspec = None
+    tok_sh = NamedSharding(mesh, P(bspec, None))
+    out = {}
+    if cfg.input_mode == "embeds":
+        emb_sh = NamedSharding(mesh, P(bspec, None, None))
+        out["inputs"] = _sds((b, s, cfg.d_model), cfg.dtype, emb_sh)
+    else:
+        out["inputs"] = _sds((b, s), jnp.int32, tok_sh)
+    out["labels"] = _sds((b, s), jnp.int32, tok_sh)
+    if cfg.rope == "mrope":
+        pos_sh = NamedSharding(mesh, P(bspec, None, None))
+        out["positions"] = _sds((b, s, 3), jnp.int32, pos_sh)
+    return out
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeSpec, planner: Planner
+                 ) -> Tuple[Any, Any, Any]:
+    """(cache, token, positions) specs for a serve_step at cache length
+    shape.seq_len with batch shape.global_batch."""
+    b, s = shape.global_batch, shape.seq_len
+    mesh = planner.mesh
+    cache_shapes = jax.eval_shape(lambda: lm.init_cache(cfg, b, s, length=s))
+    cache_axes = lm.cache_axes(cfg)
+    cache = abstract_tree(planner, cache_shapes, cache_axes)
+    dp = planner.batch_axes()
+    bspec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    n_dp = 1
+    for a in (dp or ()):
+        n_dp *= mesh.shape[a]
+    if b % n_dp:
+        bspec = None
+    tok_sh = NamedSharding(mesh, P(bspec, None))
+    token = _sds((b, 1), jnp.int32, tok_sh)
+    if cfg.rope == "mrope":
+        positions = _sds((b, 1, 3), jnp.int32,
+                         NamedSharding(mesh, P(bspec, None, None)))
+    else:
+        positions = _sds((b, 1), jnp.int32, tok_sh)
+    return cache, token, positions

@@ -1,0 +1,148 @@
+"""Train / serve step builders — the pjit programs the launcher and the
+dry-run lower.
+
+train_step(params, opt_state, batch) -> (params', opt_state', metrics)
+  - microbatched gradient accumulation (lax.scan over microbatch slices;
+    live activation memory = one microbatch) — mandatory at 340B scale.
+  - configurable remat policy applied to the layer scan body.
+  - AdamW update with sharded optimizer state (inherits param shardings).
+  - donate params/opt_state (in-place buffer reuse).
+
+serve_step(params, cache, token, positions) -> (logits, cache')
+prefill(params, inputs[, positions]) -> logits
+
+All steps install activation sharding constraints (batch over DP axes)
+at the program boundary; interior shardings propagate via GSPMD from the
+parameter/cache shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import lm
+from repro.models.common import ArchConfig
+from repro.optim.adamw import AdamWConfig, adamw_update
+from repro.runtime.sharding import Planner
+
+REMAT_POLICIES = {
+    "none": None,                                          # no jax.checkpoint
+    "nothing": jax.checkpoint_policies.nothing_saveable,   # recompute all
+    "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    "everything": jax.checkpoint_policies.everything_saveable,
+}
+
+
+def _split_microbatches(batch: Dict[str, Any], n: int) -> Dict[str, Any]:
+    return {k: v.reshape(n, v.shape[0] // n, *v.shape[1:])
+            for k, v in batch.items()}
+
+
+def make_train_fn(cfg: ArchConfig, acfg: AdamWConfig, planner: Planner,
+                  microbatches: int = 1, remat: str = "nothing",
+                  grad_dtype=jnp.float32):
+    """The pure function (params, opt_state, batch) -> outputs.
+
+    ``remat`` is one of REMAT_POLICIES or "blocks:<K>" (sqrt-L block
+    checkpointing with nothing saveable inside a K-layer block)."""
+    remat_block = 1
+    if remat.startswith("blocks:"):
+        remat_block = int(remat.split(":")[1])
+        policy = REMAT_POLICIES["nothing"]
+        remat = "blocks"
+    else:
+        policy = REMAT_POLICIES[remat]
+    mesh = planner.mesh
+    dp = planner.batch_axes()
+    bspec = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def constrain_batch(mb):
+        def c(x):
+            spec = P(bspec, *((None,) * (x.ndim - 1)))
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec))
+        return {k: c(v) for k, v in mb.items()}
+
+    def loss_of(params, mb):
+        mb = constrain_batch(mb)
+        if remat == "none":
+            return lm.loss_fn(cfg, params, mb, None)
+        return lm.loss_fn(cfg, params, mb, policy, remat_block)
+
+    grad_fn = jax.value_and_grad(lambda p, mb: loss_of(p, mb), has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            mbs = _split_microbatches(batch, microbatches)
+
+            def acc_step(carry, mb):
+                gacc, laux = carry
+                (loss, aux), g = grad_fn(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(grad_dtype), gacc, g)
+                return (gacc, laux + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, grad_dtype),
+                              params)
+            (gsum, lsum), _ = jax.lax.scan(acc_step, (g0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+        else:
+            (loss, aux), grads = grad_fn(params, batch)
+        new_params, new_opt, om = adamw_update(grads, opt_state, params,
+                                               acfg)
+        metrics = {"loss": loss, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def jit_train_step(cfg: ArchConfig, acfg: AdamWConfig, planner: Planner,
+                   param_shardings, opt_shardings, batch_shardings,
+                   microbatches: int = 1, remat: str = "nothing",
+                   donate: bool = True):
+    fn = make_train_fn(cfg, acfg, planner, microbatches, remat)
+    rep = NamedSharding(planner.mesh, P())
+    metric_sh = {"loss": rep, "grad_norm": rep, "lr": rep}
+    return jax.jit(
+        fn,
+        in_shardings=(param_shardings, opt_shardings, batch_shardings),
+        out_shardings=(param_shardings, opt_shardings, metric_sh),
+        donate_argnums=(0, 1) if donate else (),
+    )
+
+
+def make_serve_fn(cfg: ArchConfig, planner: Planner):
+    def serve_step(params, cache, token, positions):
+        logits, new_cache = lm.decode_step(cfg, params, cache, token,
+                                           positions)
+        return logits, new_cache
+    return serve_step
+
+
+def jit_serve_step(cfg: ArchConfig, planner: Planner, param_shardings,
+                   cache_shardings, token_sharding, pos_sharding,
+                   donate_cache: bool = True):
+    fn = make_serve_fn(cfg, planner)
+    mesh = planner.mesh
+    logits_sh = NamedSharding(
+        mesh, P(token_sharding.spec[0] if token_sharding.spec else None,
+                None, "model" if cfg.vocab % mesh.shape["model"] == 0
+                else None))
+    return jax.jit(
+        fn,
+        in_shardings=(param_shardings, cache_shardings, token_sharding,
+                      pos_sharding),
+        out_shardings=(logits_sh, cache_shardings),
+        donate_argnums=(1,) if donate_cache else (),
+    )
+
+
+def make_prefill_fn(cfg: ArchConfig, planner: Planner):
+    def prefill(params, inputs, positions=None):
+        return lm.prefill(cfg, params, inputs, positions)
+    return prefill

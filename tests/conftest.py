@@ -1,0 +1,28 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the
+real single-CPU device; only tests/test_dryrun.py (subprocess) and the
+sharding tests (their own 8-device subprocess config) use fake devices.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def make_weight(key, d_out, d_in, scale=0.05):
+    return jax.random.normal(key, (d_out, d_in), jnp.float32) * scale
+
+
+def make_acts(key, n, d_in):
+    return jax.random.normal(key, (n, d_in), jnp.float32)

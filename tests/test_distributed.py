@@ -1,0 +1,220 @@
+"""Distribution tests on 8 fake CPU devices — run in a subprocess so the
+fake device count never leaks into the other tests' jax runtime."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(body: str, timeout=560) -> str:
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        import numpy as np
+    """) + textwrap.dedent(body)
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src"),
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_planner_rules():
+    out = run_py("""
+        from repro import configs
+        from repro.runtime.sharding import Planner
+        from jax.sharding import PartitionSpec as P
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+        cfg = configs.get("stablelm_12b")          # 32H x 160dh
+        pl = Planner(mesh, cfg)
+        assert pl.spec(("embed", "heads"), (5120, 5120)) == P("data", "model")
+        assert pl.spec(("vocab", "embed"), (100352, 5120)) == P("model", "data")
+
+        # llama3.2: 24 heads x 128 dh -> 24*128/4 = 768 = 6 heads OK on 4
+        cfg2 = configs.get("llama3_2_3b")
+        pl2 = Planner(mesh, cfg2)
+        assert pl2.spec(("embed", "heads"), (3072, 3072)) == P("data", "model")
+        # but a 16-way model axis cannot shard 24 heads:
+        mesh16 = jax.make_mesh((1, 8), ("data", "model"))
+        pl16 = Planner(mesh16, cfg2)
+        # 24*128/8 = 384 = 3 heads -> fine on 8; simulate 16 via unit check
+        from repro.runtime.sharding import axis_constraints
+        assert axis_constraints(cfg2)["heads"] == 128
+
+        # qwen kv=2 heads: 2*128=256; on model=4 -> 64 < 128 -> dropped
+        cfg3 = configs.get("qwen2_vl_2b")
+        pl3 = Planner(mesh, cfg3)
+        assert pl3.spec(("embed", "kv"), (1536, 256)) == P("data", None)
+        print("PLANNER_OK")
+    """)
+    assert "PLANNER_OK" in out
+
+
+def test_train_step_parallel_matches_single_device():
+    """pjit train step on a 2x4 mesh computes the same loss/params as the
+    same step on a 1x1 mesh (numerical determinism of the distribution)."""
+    out = run_py("""
+        from repro import configs
+        from repro.models import lm
+        from repro.optim.adamw import AdamWConfig, adamw_init
+        from repro.runtime.sharding import Planner
+        from repro.runtime.step import make_train_fn
+        from repro.runtime.meshctx import use_mesh
+        from repro.data import SyntheticCorpus
+
+        cfg = configs.get("llama2_7b", smoke=True).with_(dtype=jnp.float32)
+        acfg = AdamWConfig(lr=1e-3)
+        params, axes = lm.init(cfg, jax.random.PRNGKey(0))
+        opt = adamw_init(params, acfg)
+        corpus = SyntheticCorpus(cfg.vocab, seed=0)
+        b = corpus.batch(0, 8, 64)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+
+        results = {}
+        for name, shape in [("single", (1, 1)), ("mesh", (2, 4))]:
+            mesh = jax.make_mesh(shape, ("data", "model"))
+            pl = Planner(mesh, cfg)
+            p_sh = pl.tree_shardings(axes, params)
+            p = jax.device_put(params, p_sh)
+            o = jax.device_put(opt, pl.tree_shardings(
+                type(opt)(axes, axes, ()), opt))
+            with use_mesh(mesh):
+                fn = jax.jit(make_train_fn(cfg, acfg, pl, microbatches=2,
+                                           remat="nothing"))
+                p2, o2, m = fn(p, o, batch)
+            results[name] = (float(m["loss"]),
+                             np.asarray(jax.device_get(
+                                 p2["final_norm"])).copy())
+        l1, fn1 = results["single"]
+        l2, fn2 = results["mesh"]
+        assert abs(l1 - l2) / abs(l1) < 1e-4, (l1, l2)
+        np.testing.assert_allclose(fn1, fn2, rtol=1e-4, atol=1e-5)
+        print("PARALLEL_MATCH_OK", l1)
+    """)
+    assert "PARALLEL_MATCH_OK" in out
+
+
+def test_compressed_ddp_step_runs_and_learns():
+    out = run_py("""
+        from repro import configs
+        from repro.models import lm
+        from repro.optim.adamw import AdamWConfig, adamw_init
+        from repro.runtime import ddp
+        from repro.data import SyntheticCorpus
+
+        cfg = configs.get("llama2_7b", smoke=True).with_(dtype=jnp.float32)
+        acfg = AdamWConfig(lr=3e-3, warmup_steps=1)
+        mesh = jax.make_mesh((8,), ("data",))
+        params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+        opt = adamw_init(params, acfg)
+        err = ddp.init_error_buffers(params)
+        step = ddp.build_compressed_ddp_step(cfg, acfg, mesh)
+        corpus = SyntheticCorpus(cfg.vocab, seed=0)
+        losses = []
+        for s in range(8):
+            b = corpus.batch(s, 16, 64)
+            batch = {k: jnp.asarray(v) for k, v in b.items()}
+            params, opt, err, m = step(params, opt, err, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0], losses
+        # error feedback buffers are being used (non-zero)
+        e0 = float(jnp.max(jnp.abs(jax.tree.leaves(err)[0])))
+        assert e0 > 0
+        print("DDP_OK", losses[0], losses[-1])
+    """)
+    assert "DDP_OK" in out
+
+
+def test_compressed_vs_uncompressed_ddp_close():
+    out = run_py("""
+        from repro import configs
+        from repro.models import lm
+        from repro.optim.adamw import AdamWConfig, adamw_init
+        from repro.runtime import ddp
+        from repro.data import SyntheticCorpus
+
+        cfg = configs.get("llama2_7b", smoke=True).with_(dtype=jnp.float32)
+        acfg = AdamWConfig(lr=1e-3, warmup_steps=1)
+        mesh = jax.make_mesh((8,), ("data",))
+        corpus = SyntheticCorpus(cfg.vocab, seed=0)
+
+        outs = {}
+        for compress in (True, False):
+            params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+            opt = adamw_init(params, acfg)
+            err = ddp.init_error_buffers(params)
+            step = ddp.build_compressed_ddp_step(cfg, acfg, mesh,
+                                                 compress=compress)
+            for s in range(4):
+                b = corpus.batch(s, 16, 64)
+                batch = {k: jnp.asarray(v) for k, v in b.items()}
+                params, opt, err, m = step(params, opt, err, batch)
+            outs[compress] = float(m["loss"])
+        # int8 EF tracks the exact all-reduce closely
+        assert abs(outs[True] - outs[False]) / abs(outs[False]) < 0.05
+        print("EF_CLOSE_OK", outs)
+    """)
+    assert "EF_CLOSE_OK" in out
+
+
+def test_elastic_restore_across_meshes():
+    out = run_py("""
+        import tempfile
+        from repro import configs
+        from repro.models import lm
+        from repro.optim.adamw import AdamWConfig, adamw_init
+        from repro.checkpoint import CheckpointManager
+        from repro.runtime.elastic import elastic_restore
+        from repro.runtime.sharding import Planner
+
+        cfg = configs.get("llama2_7b", smoke=True).with_(dtype=jnp.float32)
+        acfg = AdamWConfig()
+        mesh_a = jax.make_mesh((4, 2), ("data", "model"))
+        mesh_b = jax.make_mesh((2, 2), ("data", "model"))  # "shrunk" job
+
+        params, axes = lm.init(cfg, jax.random.PRNGKey(0))
+        pl_a = Planner(mesh_a, cfg)
+        params_a = jax.device_put(params, pl_a.tree_shardings(axes, params))
+        opt_a = adamw_init(params_a, acfg)
+
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, async_write=False)
+            mgr.save(7, {"params": params_a, "opt": opt_a})
+            state = elastic_restore(mgr, cfg, acfg, mesh_b)
+            # bitwise identical content on the new mesh
+            for a, b in zip(jax.tree.leaves(params_a),
+                            jax.tree.leaves(state["params"])):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            # and the restored arrays are actually sharded for mesh_b
+            sh = state["params"]["final_norm"].sharding
+            assert sh.mesh.shape["data"] == 2
+        print("ELASTIC_OK")
+    """)
+    assert "ELASTIC_OK" in out
+
+
+def test_dryrun_cell_subprocess_smoke():
+    """A miniature multi-pod dry-run: 2x2x2 mesh, reduced config, real
+    lower+compile+analysis through the launch.cell machinery."""
+    out = run_py("""
+        from repro import configs
+        from repro.launch import cell as cell_lib
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        cfg = configs.get("llama2_7b", smoke=True)
+        shape = configs.ShapeSpec("train_4k", "train", 128, 8)
+        res = cell_lib.run_cell("llama2_7b", "train_4k", mesh, "mini-multi",
+                                cfg_override=cfg, shape_override=shape)
+        assert res.ok, res.error
+        assert res.hlo_flops > 0 and res.collectives["total"]["count"] > 0
+        print("DRYRUN_SMOKE_OK", res.microbatches)
+    """)
+    assert "DRYRUN_SMOKE_OK" in out

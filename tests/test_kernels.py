@@ -1,0 +1,119 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing, slab
+from repro.core.slab import SLaBConfig
+from repro.kernels import ops, ref
+
+SHAPES = [   # (M, N, K, bm, bn, bk)
+    (32, 64, 128, 32, 32, 64),
+    (64, 128, 256, 32, 64, 128),
+    (128, 96, 320, 64, 32, 64),   # non-square, K not power of two
+    (16, 256, 512, 16, 128, 256),
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _mk(seed, m, n, k, dtype):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = (jax.random.normal(kx, (m, k), jnp.float32)).astype(dtype)
+    w = jax.random.normal(kw, (n, k), jnp.float32) * 0.05
+    return x, w
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+def test_binlr_matches_ref(shape, dtype):
+    m, n, k, bm, bn, bk = shape
+    x, w = _mk(0, m, n, k, dtype)
+    dec = slab.slab_decompose(w, None, SLaBConfig(cr=0.5, iters=2))
+    pk = packing.pack_decomposition(dec)
+    want = ref.binlr_ref(x.astype(jnp.float32), pk.b_packed, pk.u, pk.v)
+    got = ops.binlr(x, pk.b_packed, pk.u, pk.v, bm=bm, bn=bn, bk=bk,
+                    interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+@pytest.mark.parametrize("pattern", ["2:4", "4:8"])
+def test_nm_matmul_matches_ref(shape, pattern):
+    m, n, k, bm, bn, bk = shape
+    x, w = _mk(1, m, n, k, jnp.float32)
+    dec = slab.slab_decompose(w, None,
+                              SLaBConfig(cr=0.5, iters=2, pattern=pattern))
+    pk = packing.pack_decomposition(dec, pattern=pattern)
+    s = pk.sparse
+    want = ref.nm_matmul_ref(x, s.values, s.indices, s.m)
+    got = ops.nm_matmul(x, s.values, s.indices, s.m, bm=bm, bn=bn, bk=bk,
+                        interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+def test_slab_matmul_fused_matches_ref(shape, dtype):
+    m, n, k, bm, bn, bk = shape
+    x, w = _mk(2, m, n, k, dtype)
+    dec = slab.slab_decompose(w, None, SLaBConfig(cr=0.5, iters=2))
+    pk = packing.pack_decomposition(dec)
+    ws = dec.w_s.astype(dtype)
+    want = ref.slab_matmul_ref(x.astype(jnp.float32),
+                               dec.w_s, pk.b_packed, pk.u, pk.v)
+    got = ops.slab_matmul(x, ws, pk.b_packed, pk.u, pk.v,
+                          bm=bm, bn=bn, bk=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+def test_slab_nm_matmul_matches_ref(shape):
+    m, n, k, bm, bn, bk = shape
+    x, w = _mk(3, m, n, k, jnp.float32)
+    dec = slab.slab_decompose(w, None,
+                              SLaBConfig(cr=0.5, iters=2, pattern="2:4"))
+    pk = packing.pack_decomposition(dec, pattern="2:4")
+    s = pk.sparse
+    want = ref.slab_nm_matmul_ref(x, s.values, s.indices, s.m,
+                                  pk.b_packed, pk.u, pk.v)
+    got = ops.slab_nm_matmul(x, s.values, s.indices, s.m,
+                             pk.b_packed, pk.u, pk.v,
+                             bm=bm, bn=bn, bk=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_vs_dense_reconstruction():
+    """End to end: fused kernel == x @ Ŵᵀ for the real decomposition."""
+    x, w = _mk(4, 64, 128, 256, jnp.float32)
+    dec = slab.slab_decompose(w, None, SLaBConfig(cr=0.5, iters=4))
+    pk = packing.pack_decomposition(dec)
+    dense = x @ slab.reconstruct(dec).T
+    got = ops.slab_linear_kernel(x, pk, bm=32, bn=64, bk=64,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_batched_leading_dims():
+    """ops wrappers flatten (B, S, K) inputs."""
+    x3 = jax.random.normal(jax.random.PRNGKey(5), (4, 8, 128), jnp.float32)
+    _, w = _mk(6, 1, 64, 128, jnp.float32)
+    dec = slab.slab_decompose(w, None, SLaBConfig(cr=0.5, iters=2))
+    pk = packing.pack_decomposition(dec)
+    got = ops.slab_matmul(x3, dec.w_s, pk.b_packed, pk.u, pk.v,
+                          bm=32, bn=32, bk=64, interpret=True)
+    assert got.shape == (4, 8, 64)
+    want = ref.slab_matmul_ref(x3.reshape(-1, 128), dec.w_s, pk.b_packed,
+                               pk.u, pk.v).reshape(4, 8, 64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,231 @@
+"""Data pipeline, optimizer, checkpoint, fault-tolerance tests."""
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+from repro.data import SyntheticCorpus, calibration_batch, host_shard
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         cosine_schedule, global_norm_clip,
+                         int8_compress, int8_decompress)
+from repro.optim.compress import ef_compress_pytree, ef_decompress_pytree
+from repro.runtime.fault import FaultConfig, Supervisor
+
+
+# ------------------------------- data ----------------------------------
+
+def test_batches_deterministic_in_step():
+    c = SyntheticCorpus(512, seed=3)
+    b1 = c.batch(17, 8, 64)
+    b2 = c.batch(17, 8, 64)
+    np.testing.assert_array_equal(b1["inputs"], b2["inputs"])
+    b3 = c.batch(18, 8, 64)
+    assert not np.array_equal(b1["inputs"], b3["inputs"])
+
+
+def test_labels_are_shifted_inputs():
+    b = SyntheticCorpus(512, seed=0).batch(0, 4, 32)
+    np.testing.assert_array_equal(b["inputs"][:, 1:], b["labels"][:, :-1])
+
+
+def test_corpus_is_learnable_structure():
+    """Next token is predictable from current far above chance."""
+    b = SyntheticCorpus(128, seed=0).batch(0, 64, 256)
+    x, y = b["inputs"].ravel(), b["labels"].ravel()
+    # conditional mode accuracy of P(y|x):
+    from collections import Counter, defaultdict
+    cond = defaultdict(Counter)
+    for xi, yi in zip(x[:8000], y[:8000]):
+        cond[xi][yi] += 1
+    hits = sum(c.most_common(1)[0][1] for c in cond.values())
+    tot = sum(sum(c.values()) for c in cond.values())
+    assert hits / tot > 5.0 / 128       # >> uniform chance
+
+
+def test_host_shard_partitions():
+    b = SyntheticCorpus(64, seed=0).batch(0, 8, 16)
+    parts = [host_shard(b, h, 4) for h in range(4)]
+    cat = np.concatenate([p["inputs"] for p in parts])
+    np.testing.assert_array_equal(cat, b["inputs"])
+
+
+def test_calibration_protocol_shape():
+    cal = calibration_batch(1000, n_seq=128, seq_len=2048)
+    assert cal.shape == (128, 2048)
+    assert cal.dtype == np.int32
+    assert cal.max() < 1000
+
+
+# ------------------------------ optim ----------------------------------
+
+def test_adamw_decreases_quadratic():
+    acfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                       total_steps=100)
+    params = {"w": jnp.ones((8,)) * 5.0}
+    opt = adamw_init(params, acfg)
+    for _ in range(60):
+        g = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(g, opt, params, acfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.5
+
+
+def test_cosine_schedule_shape():
+    acfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                       min_lr_frac=0.1)
+    lrs = [float(cosine_schedule(acfg, jnp.asarray(s)))
+           for s in (0, 5, 10, 55, 100)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 0.5) < 1e-6
+    assert abs(lrs[2] - 1.0) < 1e-6
+    assert lrs[3] < 1.0
+    assert abs(lrs[4] - 0.1) < 1e-6
+
+
+def test_grad_clip():
+    g = {"a": jnp.ones((100,)) * 10.0}
+    clipped, gn = global_norm_clip(g, 1.0)
+    assert abs(float(gn) - 100.0) < 1e-3
+    norm_after = float(jnp.linalg.norm(clipped["a"]))
+    assert abs(norm_after - 1.0) < 1e-4
+
+
+def test_bf16_moments_option():
+    acfg = AdamWConfig(moment_dtype=jnp.bfloat16)
+    params = {"w": jnp.ones((4,), jnp.float32)}
+    opt = adamw_init(params, acfg)
+    assert opt.mu["w"].dtype == jnp.bfloat16
+    p2, o2, _ = adamw_update({"w": jnp.ones((4,))}, opt, params, acfg)
+    assert o2.mu["w"].dtype == jnp.bfloat16
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 100), scale=st.floats(1e-6, 1e3))
+def test_int8_roundtrip_bounded_error(seed, scale):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (256,)) * scale
+    q, s = int8_compress(g)
+    back = int8_decompress(q, s)
+    assert float(jnp.max(jnp.abs(back - g))) <= float(s) * 0.5 + 1e-9
+
+
+def test_error_feedback_reduces_bias():
+    """Sum of EF-compressed grads over steps converges to the true sum."""
+    rng = jax.random.PRNGKey(0)
+    err = {"w": jnp.zeros((64,))}
+    true_sum = jnp.zeros((64,))
+    ef_sum = jnp.zeros((64,))
+    for i in range(50):
+        g = {"w": jax.random.normal(jax.random.fold_in(rng, i), (64,))}
+        q, s, err = ef_compress_pytree(g, err)
+        back = ef_decompress_pytree(q, s)
+        true_sum = true_sum + g["w"]
+        ef_sum = ef_sum + back["w"]
+    resid = float(jnp.max(jnp.abs(true_sum - ef_sum - err["w"])))
+    assert resid < 1e-3      # EF invariant: sum + carried error == truth
+
+
+# ---------------------------- checkpoint -------------------------------
+
+def _tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((2,), jnp.bfloat16),
+                  "d": jnp.asarray(3, jnp.int32)}}
+
+
+def test_save_load_roundtrip(tmp_path):
+    t = _tree()
+    save_pytree(t, str(tmp_path / "ck"))
+    out = load_pytree(t, str(tmp_path / "ck"))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_atomic_commit_no_partial_state(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+    mgr.save(1, _tree())
+    mgr.save(2, _tree())
+    mgr.save(3, _tree())
+    assert mgr.steps() == [2, 3]          # keep=2 GC'd step 1
+    assert mgr.latest_step() == 3
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+def test_async_writer(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=True)
+    mgr.save(5, _tree())
+    mgr.wait()
+    assert mgr.latest_step() == 5
+    out = mgr.restore(_tree())
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.asarray(_tree()["a"]))
+
+
+# -------------------------- fault tolerance ----------------------------
+
+def test_supervisor_restores_and_replays(tmp_path):
+    """Inject a failure mid-run; training must restore from the last
+    commit and reach the same final state as an uninterrupted run."""
+    def run(fail_at):
+        mgr = CheckpointManager(str(tmp_path / f"f{fail_at}"),
+                                async_write=False)
+        state = {"x": jnp.zeros(())}
+        failed = {"done": False}
+
+        def step_fn(state, step):
+            # deterministic "training": x += step
+            return {"x": state["x"] + step}, {"loss": float(state["x"])}
+
+        def fail_hook(step):
+            if fail_at is not None and step == fail_at and not failed["done"]:
+                failed["done"] = True
+                return True
+            return False
+
+        sup = Supervisor(mgr, FaultConfig(ckpt_every=4, max_restarts=2),
+                         failure_hook=fail_hook)
+        out = sup.run(state, 0, 10, step_fn,
+                      restore_fn=lambda s: mgr.restore({"x": jnp.zeros(())}))
+        return float(out["x"]), sup.stats.restarts
+
+    clean, r0 = run(None)
+    faulty, r1 = run(6)
+    assert r0 == 0 and r1 == 1
+    assert clean == faulty == float(sum(range(10)))
+
+
+def test_supervisor_gives_up_after_max_restarts(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    mgr.save(0, {"x": jnp.zeros(())})
+    sup = Supervisor(mgr, FaultConfig(ckpt_every=100, max_restarts=1),
+                     failure_hook=lambda s: True)   # always failing
+    with pytest.raises(RuntimeError):
+        sup.run({"x": jnp.zeros(())}, 0, 5,
+                lambda st, s: (st, {}),
+                restore_fn=lambda s: mgr.restore({"x": jnp.zeros(())}))
+
+
+def test_straggler_detection():
+    mgr = None
+
+    class NoopMgr:
+        def wait(self):
+            pass
+        def save(self, *a):
+            pass
+
+    sup = Supervisor(NoopMgr(), FaultConfig(ckpt_every=1000,
+                                            straggler_factor=3.0))
+    slow = {8}
+
+    def step_fn(state, step):
+        time.sleep(0.05 if step in slow else 0.002)
+        return state, {}
+
+    sup.run({}, 0, 12, step_fn, restore_fn=lambda s: {})
+    assert sup.stats.stragglers >= 1
