@@ -49,15 +49,18 @@ def main():
         return float(np.exp(tot / 3))
 
     print(f"dense ppl (untrained: ~ln V baseline): {quality(params):.2f}")
-    for method in ("slab", "wanda", "magnitude"):
+    # sparsegpt runs on every family now that Hessians come from taps
+    for method in ("slab", "wanda", "sparsegpt", "magnitude"):
         scfg = SLaBConfig(cr=args.cr, pattern=args.pattern,
                           iters=args.iters)
         new, stats = compress_model(cfg, params, cal, method=method,
                                     scfg=scfg,
                                     progress=lambda s: None)
-        errs = [s.err_after for s in stats if s.err_after]
+        # relative activation-weighted reconstruction error: err_after
+        # against the zero-approximation baseline err_before
+        rel = [s.err_after / s.err_before for s in stats if s.err_before]
         print(f"{method:10s} CR={args.cr:.0%} ppl={quality(new):8.2f} "
-              f"mean-layer-recon-err={np.mean(errs):.4f}")
+              f"rel-recon-err={np.mean(rel):.4f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Fast verify tiers (PYTHONPATH handled for you):
+#
+#   scripts/tier1.sh            # fast tier: everything except @slow
+#                               # (subprocess dry-runs, training loops)
+#   scripts/tier1.sh core       # kernel/core edit loop (~1 min): SLaB
+#                               # decomposition, Pallas kernels, taps,
+#                               # flash-decode, HLO analysis
+#   scripts/tier1.sh <pytest args...>   # anything else passes through
+#
+# The full suite (the tier-1 gate, incl. @slow) stays:
+#   PYTHONPATH=src python -m pytest -q
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [ "${1:-}" = "core" ]; then
+    shift
+    exec python -m pytest -q -m "not slow" \
+        tests/test_slab_core.py tests/test_substrates.py \
+        tests/test_kernels.py tests/test_flash_decode.py \
+        tests/test_taps.py tests/test_perf_features.py "$@"
+fi
+exec python -m pytest -q -m "not slow" "$@"

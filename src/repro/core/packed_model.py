@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.core.packing import pack_nm, pack_sign_bits
 from repro.core.slab import SLaBDecomposition
+from repro.models.common import tap_record
 
 Array = jax.Array
 
@@ -68,9 +69,14 @@ def packed_matmul(x: Array, w: PackedLinear,
     ).astype(x.dtype)
 
 
-def linear(x: Array, w) -> Array:
+def linear(x: Array, w, tap: Optional[str] = None) -> Array:
     """Dispatch point used by the model layers: dense `x @ w` or the
-    packed fused kernel."""
+    packed fused kernel. ``tap`` names this linear for activation
+    capture (models.common.tap_capture): when a capture is active the
+    exact input ``x`` is reported under the current tap scope before
+    the matmul runs; otherwise it's a no-op."""
+    if tap is not None:
+        tap_record(tap, x)
     if isinstance(w, PackedLinear):
         return packed_matmul(x, w)
     return x @ w

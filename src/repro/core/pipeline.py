@@ -1,20 +1,39 @@
 """Layer-wise one-shot compression driver (the SparseGPT/Wanda protocol
-the paper follows, §II-A1):
+the paper follows, §II-A1), with calibration statistics sourced from
+**activation taps** — not from re-implemented layer math.
 
   for each transformer layer, in order:
     (1) forward the calibration set through the *already-compressed*
         prefix to the layer's inputs,
-    (2) capture per-linear input activations -> ‖X‖₂ column norms,
-    (3) decompose every linear in the layer (SLaB / a baseline),
+    (2) run the layer's REAL forward (``models.lm._layer_fwd``) under
+        ``models.common.tap_capture``: the ``linear()`` dispatch
+        chokepoint reports every linear's exact input, reduced on the
+        fly to ‖X‖₂ column norms and (for SparseGPT / when requested)
+        X^T X Hessians,
+    (3) decompose every linear in the layer (SLaB / a baseline) from
+        those tapped stats,
     (4) replace the weights and continue forward with the compressed
         layer's outputs (error propagation).
+
+The tap protocol: modules name their linears (``linear(x, w,
+tap="wq")``) under scope prefixes pushed by the layer assembly
+("attn", "mlp", "moe", "moe.shared", "mamba"), so tap names equal the
+``linear_paths`` entries below by construction. One source of truth —
+attention, MoE dispatch (per-expert stats see exactly the
+dispatched-token subsets, capacity drops included), the Mamba-2 SSD
+scan, and the hybrid shared block are never re-derived here, every
+family gets exact ``attn.wo``-style downstream stats, and Hessians are
+available for all families (dense, MoE per-expert, SSM, hybrid).
+Future scoring variants (HASSLE-free alternating updates, SoLA-style
+soft sparsity) plug in at the same chokepoint without touching model
+code.
 
 Works on the model zoo's stacked-params layout: weights live as
 ``params["layers"][...]`` leaves with a leading L dim; we slice layer l,
 compress its 2-D linears, and write them back. MoE experts are
-compressed per-expert with expert-specific activation statistics
-(DESIGN.md §4): the dispatched-token subset that actually reaches each
-expert is what feeds its ‖X‖₂.
+compressed per-expert with expert-specific activation statistics: the
+dispatched-token subset that actually reaches each expert is what feeds
+its ‖X‖₂ and X^T X.
 
 Per the paper, embeddings and the LM head are excluded (§III-A4); norms,
 biases and other 1-D leaves are untouched.
@@ -32,22 +51,17 @@ from repro.core import baselines as base_lib
 from repro.core import scores as scores_lib
 from repro.core.slab import SLaBConfig, slab_decompose, reconstruct
 from repro.models import lm
-from repro.models.common import ArchConfig, positions_for, rms_norm
+from repro.models.common import ArchConfig, positions_for, tap_capture
 
 Array = jax.Array
-
-# 2-D weight leaves eligible for compression, per layer family.
-# (path within one layer's params dict, input-activation source)
-DENSE_LINEARS = ["attn.wq", "attn.wk", "attn.wv", "attn.wo",
-                 "mlp.w_gate", "mlp.w_up", "mlp.w_down"]
 
 
 @dataclasses.dataclass
 class CompressStats:
     layer: int
     name: str
-    err_before: float
-    err_after: float
+    err_before: float   # ‖W diag(n)‖_F — the zero-approximation baseline
+    err_after: float    # ‖(W - Ŵ) diag(n)‖_F with the same tapped norms
     cr: float
 
 
@@ -85,6 +99,31 @@ def linear_paths(cfg: ArchConfig) -> List[str]:
     return paths
 
 
+def layer_tap_stats(cfg: ArchConfig, params: dict, lp: dict, idx: int,
+                    h: Array, positions: Array, hessian: bool = False
+                    ) -> Tuple[Dict[str, Array], Dict[str, Array]]:
+    """Run layer ``idx``'s real forward under an activation-tap capture.
+
+    Returns ``(act_norms, hessians)`` keyed by ``linear_paths`` names:
+    norms are (D_in,) — stacked (E, D_in) for MoE experts — and
+    Hessians X^T X are (D_in, D_in) / (E, D_in, D_in); ``hessians`` is
+    empty unless ``hessian=True``.
+    """
+    with tap_capture(hessian=hessian,
+                     hessian_names=set(linear_paths(cfg))) as tap:
+        lm._layer_fwd(cfg, params, lp, jnp.asarray(idx), h, positions)
+    acts: Dict[str, Array] = {}
+    hess: Dict[str, Array] = {}
+    for pth in linear_paths(cfg):
+        if not tap.has(pth):
+            continue
+        acts[pth] = tap.norms(pth)
+        hz = tap.hessian(pth)
+        if hz is not None:
+            hess[pth] = hz
+    return acts, hess
+
+
 def _compress_matrix(w: Array, act_norms: Optional[Array], method: str,
                      scfg: SLaBConfig, hessian: Optional[Array] = None
                      ) -> Tuple[Array, Optional[object]]:
@@ -115,124 +154,31 @@ def _compress_matrix(w: Array, act_norms: Optional[Array], method: str,
     return out.T.astype(w.dtype), dec
 
 
-def _layer_activations(cfg: ArchConfig, params: dict, lp: dict, idx: int,
-                       h: Array, positions: Array) -> Dict[str, Array]:
-    """Column-norm stats for every linear in layer ``idx`` given the
-    layer input h (N, S, D). Mirrors models.lm._layer_fwd wiring."""
-    stats: Dict[str, Array] = {}
-
-    def note(path: str, x: Array):
-        stats[path] = scores_lib.act_col_norms(x)
-
-    if cfg.family in ("ssm", "hybrid"):
-        hn = rms_norm(h, lp["norm"], cfg.norm_eps)
-        note("mamba.in_z", hn)
-        note("mamba.in_x", hn)
-        # out_proj input: the gated/normalized y — recompute block pieces
-        from repro.models import mamba2 as mamba_lib
-        b, s, _ = hn.shape
-        z = hn @ lp["mamba"]["in_z"]
-        xs = jax.nn.silu(mamba_lib._causal_conv(
-            hn @ lp["mamba"]["in_x"], lp["mamba"]["conv_x"]))
-        bmat = jax.nn.silu(mamba_lib._causal_conv(
-            hn @ lp["mamba"]["in_b"], lp["mamba"]["conv_b"]))
-        cmat = jax.nn.silu(mamba_lib._causal_conv(
-            hn @ lp["mamba"]["in_c"], lp["mamba"]["conv_c"]))
-        dt = jax.nn.softplus(hn.astype(jnp.float32) @ lp["mamba"]["in_dt"]
-                             + lp["mamba"]["dt_bias"])
-        a = -jnp.exp(lp["mamba"]["a_log"])
-        xh = xs.reshape(b, s, cfg.ssm_heads, cfg.ssm_headdim)
-        y, _ = mamba_lib._ssd_chunk_scan(xh, dt, a, bmat, cmat,
-                                         cfg.ssm_chunk)
-        y = y + xh.astype(jnp.float32) * lp["mamba"]["d_skip"][None, None, :, None]
-        y = y.reshape(b, s, cfg.d_inner).astype(cfg.dtype)
-        y = rms_norm(y * jax.nn.silu(z), lp["mamba"]["gate_norm"],
-                     cfg.norm_eps)
-        note("mamba.out", y)
-        return stats
-
-    hn = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
-    for pth in ("attn.wq", "attn.wk", "attn.wv"):
-        note(pth, hn)
-    # wo input: attention context
-    from repro.models import attention as attn_lib
-    ctx_out = attn_lib.multihead_attention(cfg, lp["attn"], hn, positions)
-    # recover pre-wo input: rerun without wo — cheaper: note via hook-free
-    # recompute of the context (wo input = out before @wo)
-    b, s, _ = hn.shape
-    h2 = h + ctx_out
-    hm = rms_norm(h2, lp["mlp_norm"], cfg.norm_eps)
-    # context (pre-wo) activation: approximate with hn-driven recompute
-    ctx = _attention_context(cfg, lp["attn"], hn, positions)
-    note("attn.wo", ctx)
-
-    if cfg.family == "moe":
-        note("moe.w_gate", hm)   # per-expert stats refined below
-        note("moe.w_up", hm)
-        from repro.models import moe as moe_lib
-        probs = jax.nn.softmax(
-            (hm.reshape(-1, hm.shape[-1]).astype(jnp.float32)
-             @ lp["moe"]["router"].astype(jnp.float32)), axis=-1)
-        top = jnp.argsort(-probs, axis=-1)[:, :cfg.top_k]
-        flat = hm.reshape(-1, hm.shape[-1]).astype(jnp.float32)
-        e_norms, h_norms = [], []
-        for e in range(cfg.n_experts):
-            sel = jnp.any(top == e, axis=-1)
-            xe = flat * sel[:, None]
-            e_norms.append(jnp.sqrt(jnp.sum(xe * xe, axis=0)))
-            he = jax.nn.silu(xe @ lp["moe"]["w_gate"][e]) * \
-                (xe @ lp["moe"]["w_up"][e])
-            h_norms.append(jnp.sqrt(jnp.sum(
-                he.astype(jnp.float32) ** 2, axis=0)))
-        stats["moe.w_gate"] = jnp.stack(e_norms)       # (E, D)
-        stats["moe.w_up"] = jnp.stack(e_norms)
-        stats["moe.w_down"] = jnp.stack(h_norms)       # (E, F)
-        if cfg.shared_ff:
-            note("moe.shared.w_gate", hm)
-            note("moe.shared.w_up", hm)
-            sh = jax.nn.silu(hm @ lp["moe"]["shared"]["w_gate"]) * \
-                (hm @ lp["moe"]["shared"]["w_up"])
-            note("moe.shared.w_down", sh)
-    else:
-        note("mlp.w_gate", hm)
-        note("mlp.w_up", hm)
-        if cfg.act == "swiglu":
-            mid = jax.nn.silu(hm @ lp["mlp"]["w_gate"]) * \
-                (hm @ lp["mlp"]["w_up"])
-        else:
-            from repro.models.common import activation
-            kind = "gelu" if cfg.act == "gelu" else "relu2"
-            mid = activation(hm @ lp["mlp"]["w_up"], kind)
-        note("mlp.w_down", mid)
-    return stats
+def _expert_hessian(hess: Optional[Array], e: int, d_in: int
+                    ) -> Optional[Array]:
+    """Slice expert ``e``'s Hessian; an expert that saw no calibration
+    tokens (all-zero Gram) falls back to the identity, which reduces
+    SparseGPT to magnitude pruning instead of zeroing the expert."""
+    if hess is None:
+        return None
+    hz = hess[e] if hess.ndim == 3 else hess
+    if float(jnp.trace(hz)) == 0.0:
+        return jnp.eye(d_in, dtype=jnp.float32)
+    return hz
 
 
-def _attention_context(cfg, ap, hn, positions):
-    """Pre-wo attention context (B, S, d_q)."""
-    import types
-    from repro.models import attention as attn_lib
-    # rerun attention but stop before wo: reuse internals
-    b, s, d = hn.shape
-    h_, kv, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
-    g = h_ // kv
-    from repro.models.common import rotate
-    q = (hn @ ap["wq"]).reshape(b, s, h_, dh)
-    k = (hn @ ap["wk"]).reshape(b, s, kv, dh)
-    v = (hn @ ap["wv"]).reshape(b, s, kv, dh)
-    q = rotate(cfg, q, positions)
-    k = rotate(cfg, k, positions)
-    if g > 1:
-        k = jnp.repeat(k, g, axis=2)
-        v = jnp.repeat(v, g, axis=2)
-    q = q * (dh ** -0.5)
-    logits = jnp.einsum("bqhd,bshd->bhqs", q, k,
-                        preferred_element_type=jnp.float32)
-    if cfg.causal:
-        ii = jnp.arange(s)
-        logits = jnp.where((ii[:, None] >= ii[None, :])[None, None],
-                           logits, -1e30)
-    probs = jax.nn.softmax(logits, -1).astype(cfg.dtype)
-    return jnp.einsum("bhqs,bshd->bqhd", probs, v).reshape(b, s, cfg.d_q)
+def _weighted_errs(w: Array, w_new: Array, an: Optional[Array]
+                   ) -> Tuple[float, float]:
+    """(err_before, err_after): activation-weighted Frobenius error of
+    the zero approximation (the pre-compression baseline — what a layer
+    would lose if the linear were dropped entirely) and of the actual
+    reconstruction, both under the same tapped norms."""
+    wt = w.T.astype(jnp.float32)
+    zero = jnp.zeros_like(wt)
+    err_b = float(scores_lib.weighted_fro_error(wt, zero, an))
+    err_a = float(scores_lib.weighted_fro_error(
+        wt, w_new.T.astype(jnp.float32), an))
+    return err_b, err_a
 
 
 def compress_model(cfg: ArchConfig, params: dict, calib_tokens: np.ndarray,
@@ -244,9 +190,11 @@ def compress_model(cfg: ArchConfig, params: dict, calib_tokens: np.ndarray,
     """Run the layer-wise protocol. Returns (new params, stats[, decs]).
 
     ``calib_tokens`` (N, S) int32 (or (N, S, D) embeds for stub-frontend
-    families). Hessians (X^T X) are collected only for SparseGPT.
-    ``keep_decompositions`` additionally returns {(layer, path): dec}
-    for core.packed_model.pack_model (kernel-served packed weights)."""
+    families). Hessians (X^T X) are tapped only for SparseGPT (or when
+    ``collect_hessian`` forces it) — for every family, including MoE
+    (per-expert) and SSM. ``keep_decompositions`` additionally returns
+    {(layer, path): dec} for core.packed_model.pack_model (kernel-served
+    packed weights)."""
     stats: List[CompressStats] = []
     decs: Dict[Tuple[int, str], object] = {}
     x = jnp.asarray(calib_tokens)
@@ -254,13 +202,12 @@ def compress_model(cfg: ArchConfig, params: dict, calib_tokens: np.ndarray,
     b, s = h.shape[0], h.shape[1]
     positions = positions_for(cfg, b, s)
     new_layers = jax.tree.map(lambda a: a, params["layers"])  # shallow copy
+    want_hess = collect_hessian or method == "sparsegpt"
 
     for l in range(cfg.n_layers):
         lp = jax.tree.map(lambda a: a[l], params["layers"])
-        acts = _layer_activations(cfg, params, lp, l, h, positions)
-        hess: Dict[str, Array] = {}
-        if collect_hessian or method == "sparsegpt":
-            hess = _layer_hessians(cfg, lp, h, positions, acts)
+        acts, hess = layer_tap_stats(cfg, params, lp, l, h, positions,
+                                     hessian=want_hess)
 
         for pth in linear_paths(cfg):
             w = _get(lp, pth)
@@ -268,31 +215,31 @@ def compress_model(cfg: ArchConfig, params: dict, calib_tokens: np.ndarray,
                 continue
             an = acts.get(pth)
             if w.ndim == 3:        # MoE experts (E, D, F): per-expert
-                outs = []
+                outs, eb2, ea2 = [], 0.0, 0.0
                 for e in range(w.shape[0]):
                     an_e = an[e] if (an is not None and an.ndim == 2) else an
-                    o, _ = _compress_matrix(w[e], an_e, method, scfg,
-                                            hess.get(pth))
+                    o, _ = _compress_matrix(
+                        w[e], an_e, method, scfg,
+                        _expert_hessian(hess.get(pth), e, w.shape[1]))
                     outs.append(o)
+                    b_e, a_e = _weighted_errs(w[e], o, an_e)
+                    eb2 += b_e ** 2
+                    ea2 += a_e ** 2
                 w_new = jnp.stack(outs)
+                err_b, err_a = float(np.sqrt(eb2)), float(np.sqrt(ea2))
             else:
                 w_new, dec = _compress_matrix(w, an, method, scfg,
                                               hess.get(pth))
                 if keep_decompositions and dec is not None:
                     decs[(l, pth)] = dec
-            err_b = 0.0
-            err_a = float(scores_lib.weighted_fro_error(
-                w.T.astype(jnp.float32), w_new.T.astype(jnp.float32),
-                None)) if w.ndim == 2 else 0.0
+                err_b, err_a = _weighted_errs(w, w_new, an)
             stats.append(CompressStats(l, pth, err_b, err_a, scfg.cr))
             _set(lp, pth, w_new)
 
         # write back and propagate through the *compressed* layer
         new_layers = jax.tree.map(
             lambda buf, leaf: buf.at[l].set(leaf), new_layers, lp)
-        params_l = dict(params)
-        params_l["layers"] = new_layers
-        h, _ = lm._layer_fwd(cfg, params_l, lp, jnp.asarray(l), h, positions)
+        h, _ = lm._layer_fwd(cfg, params, lp, jnp.asarray(l), h, positions)
         if progress:
             progress(f"layer {l + 1}/{cfg.n_layers} compressed")
 
@@ -301,34 +248,3 @@ def compress_model(cfg: ArchConfig, params: dict, calib_tokens: np.ndarray,
     if keep_decompositions:
         return out, stats, decs
     return out, stats
-
-
-def _layer_hessians(cfg, lp, h, positions, acts) -> Dict[str, Array]:
-    """X^T X per linear (SparseGPT). Only 2-D dense-family paths."""
-    out: Dict[str, Array] = {}
-    hn = rms_norm(h, lp.get("attn_norm", lp.get("norm")), cfg.norm_eps)
-    flat = hn.reshape(-1, hn.shape[-1]).astype(jnp.float32)
-    hh = flat.T @ flat
-    for pth in ("attn.wq", "attn.wk", "attn.wv"):
-        out[pth] = hh
-    if "mlp" in lp:
-        h2 = h + _attention_context(cfg, lp["attn"], hn, positions) @ \
-            lp["attn"]["wo"]
-        hm = rms_norm(h2, lp["mlp_norm"], cfg.norm_eps)
-        fm = hm.reshape(-1, hm.shape[-1]).astype(jnp.float32)
-        hmm = fm.T @ fm
-        out["mlp.w_gate"] = hmm
-        out["mlp.w_up"] = hmm
-        if cfg.act == "swiglu":
-            mid = jax.nn.silu(hm @ lp["mlp"]["w_gate"]) * \
-                (hm @ lp["mlp"]["w_up"])
-        else:
-            from repro.models.common import activation
-            mid = activation(hm @ lp["mlp"]["w_up"],
-                             "gelu" if cfg.act == "gelu" else "relu2")
-        fmid = mid.reshape(-1, mid.shape[-1]).astype(jnp.float32)
-        out["mlp.w_down"] = fmid.T @ fmid
-        ctx = _attention_context(cfg, lp["attn"], hn, positions)
-        fc = ctx.reshape(-1, ctx.shape[-1]).astype(jnp.float32)
-        out["attn.wo"] = fc.T @ fc
-    return out

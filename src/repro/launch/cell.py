@@ -146,6 +146,8 @@ def run_cell(arch_id: str, shape_name: str, mesh: Mesh, mesh_name: str,
         res.compile_s = time.monotonic() - t0
 
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):    # older jax: list of per-device dicts
+            ca = ca[0] if ca else {}
         res.flops = float(ca.get("flops", 0.0))
         res.bytes_accessed = float(ca.get("bytes accessed", 0.0))
 

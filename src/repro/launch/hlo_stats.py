@@ -54,7 +54,6 @@ _BRANCH_RE = re.compile(
     r"\{?%?([\w.\-]+(?:,\s*%[\w.\-]+)*)\}?")
 _GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
-_DOT_OPERANDS_RE = re.compile(r"dot\(%([\w.\-]+), %([\w.\-]+)\)")
 _LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _NAME_RE = re.compile(r"%([\w.\-]+)")
 _PARAM_N_RE = re.compile(r"parameter\((\d+)\)")
@@ -322,11 +321,15 @@ def analyze(text: str) -> Dict:
             # ---- dot flops
             if opcode == "dot":
                 dt, rdims = _first_shape(result)
-                dm = _DOT_OPERANDS_RE.search(line)
+                # operand names via the comment/type-tolerant helper:
+                # newer XLA prints typed operands ("dot(f32[..] %a, ..)"),
+                # which a bare "dot(%a, %b)" pattern misses — dropping the
+                # contracted-dim factor from every while-body matmul.
+                dot_ops = _operand_names(line, opcode)
                 cm = _LHS_CONTRACT_RE.search(line)
                 contracted = 1
-                if dm and cm and cm.group(1):
-                    lhs = comp.symbols.get(dm.group(1))
+                if dot_ops and cm and cm.group(1):
+                    lhs = comp.symbols.get(dot_ops[0])
                     if lhs:
                         for d in cm.group(1).split(","):
                             di = int(d)

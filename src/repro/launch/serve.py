@@ -53,7 +53,8 @@ def main():
     ap.add_argument("--arch", default="llama2_7b")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--compress", choices=["none", "slab", "wanda",
-                                           "magnitude"], default="slab")
+                                           "magnitude", "sparsegpt"],
+                    default="slab")
     ap.add_argument("--packed", action="store_true",
                     help="serve through the fused Pallas kernels (SLaB "
                          "on-HBM format; interpret mode on CPU)")

@@ -65,9 +65,9 @@ def multihead_attention(
     b, s, d = x.shape
     h, kv, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
     g = h // kv
-    q = linear(x, p["wq"]).reshape(b, s, h, dh)
-    k = linear(x, p["wk"]).reshape(b, s, kv, dh)
-    v = linear(x, p["wv"]).reshape(b, s, kv, dh)
+    q = linear(x, p["wq"], tap="wq").reshape(b, s, h, dh)
+    k = linear(x, p["wk"], tap="wk").reshape(b, s, kv, dh)
+    v = linear(x, p["wv"], tap="wv").reshape(b, s, kv, dh)
     q = rotate(cfg, q, positions)
     k = rotate(cfg, k, positions)
     if g > 1:                       # expand KV to full heads: clean TP on H
@@ -119,7 +119,7 @@ def multihead_attention(
     qpos_cs = qpos_rows[0].reshape(n_chunks, cq)
     _, out = jax.lax.scan(chunk, None, (q_cs, qpos_cs))
     out = out.swapaxes(0, 1).reshape(b, s, cfg.d_q)
-    return linear(out, p["wo"])
+    return linear(out, p["wo"], tap="wo")
 
 
 # ------------------------------------------------------------------
@@ -176,9 +176,9 @@ def decode_attention(
     convert fuses into the dot's operand pipeline)."""
     b, s, d = x.shape
     kv, g, dh = cfg.n_kv, cfg.n_heads // cfg.n_kv, cfg.d_head
-    q = linear(x, p["wq"]).reshape(b, s, cfg.n_heads, dh)
-    k_new = linear(x, p["wk"]).reshape(b, s, kv, dh)
-    v_new = linear(x, p["wv"]).reshape(b, s, kv, dh)
+    q = linear(x, p["wq"], tap="wq").reshape(b, s, cfg.n_heads, dh)
+    k_new = linear(x, p["wk"], tap="wk").reshape(b, s, kv, dh)
+    v_new = linear(x, p["wv"], tap="wv").reshape(b, s, kv, dh)
     q = rotate(cfg, q, positions)
     k_new = rotate(cfg, k_new, positions)
 
@@ -218,4 +218,4 @@ def decode_attention(
     vv = v.astype(cfg.dtype) if cfg.kv_quant else v
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs, vv)
     out = out.reshape(b, s, cfg.d_q)
-    return linear(out, p["wo"]), new_cache
+    return linear(out, p["wo"], tap="wo"), new_cache

@@ -19,13 +19,211 @@ Logical axis vocabulary:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Any, Optional, Tuple
+import threading
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 Array = jax.Array
+
+
+# ------------------------------------------------------------------
+# Activation taps
+# ------------------------------------------------------------------
+#
+# The calibration statistics that drive compression (‖X‖₂ column norms,
+# X^T X Hessians) are captured from the *real* model forward instead of
+# re-deriving layer wiring elsewhere. The mechanism:
+#
+#   * ``core.packed_model.linear(x, w, tap="wq")`` — the single matmul
+#     dispatch chokepoint — reports its input ``x`` here when a capture
+#     is active;
+#   * modules that own several linears run them under ``tap_scope``
+#     prefixes ("attn", "mlp", "moe", "shared", "mamba"), so full tap
+#     names ("attn.wq", "moe.shared.w_gate", "mamba.out") match the
+#     compression pipeline's ``linear_paths`` exactly;
+#   * ``with tap_capture(hessian=...) as tap:`` activates recording for
+#     the enclosed (eager) forward and accumulates streaming fp32
+#     reductions per tap name.
+#
+# Captures are thread-local and nestable; recording is a no-op (one
+# list check) when no capture is active, so instrumented forwards cost
+# nothing in production, and the scope/record calls inside scanned layer
+# bodies only ever execute at trace time.
+
+_tap_state = threading.local()
+
+
+def _tap_captures() -> List["TapCapture"]:
+    if not hasattr(_tap_state, "captures"):
+        _tap_state.captures = []
+    return _tap_state.captures
+
+
+def _tap_prefix() -> List[str]:
+    if not hasattr(_tap_state, "prefix"):
+        _tap_state.prefix = []
+    return _tap_state.prefix
+
+
+class TapCapture:
+    """Streaming per-linear activation statistics for one capture scope.
+
+    Per tap name, accumulates (fp32) the column sum-of-squares of every
+    recorded input — ``norms(name)`` is then ``diag(sqrt(X^T X))`` — and,
+    with ``hessian=True``, the full Gram matrix ``X^T X``. Stacked
+    (per-expert) records keep a leading expert dim: norms (E, D_in),
+    Hessians (E, D_in, D_in), holding exactly the dispatched-token
+    subset each expert served.
+    """
+
+    def __init__(self, hessian: bool = False,
+                 hessian_names: Optional[set] = None):
+        self.want_hessian = hessian
+        # restrict the O(T·D²) Gram accumulation to these tap names
+        # (None = all); norms are cheap and always recorded
+        self._hess_names = (None if hessian_names is None
+                            else set(hessian_names))
+        self._sumsq: Dict[str, Array] = {}
+        self._hess: Dict[str, Array] = {}
+        self._count: Dict[str, Any] = {}   # int, or (E,) for stacked taps
+        # taps fed by the same array in one forward (wq/wk/wv share hn,
+        # moe w_gate/w_up share expert_in) share one Gram compute. The
+        # cache is bounded: entries hold a strong ref to the recorded
+        # activation (keeps the id valid), and same-input taps fire back
+        # to back, so a few slots give full dedup without pinning every
+        # batch's activations in a streaming multi-batch capture
+        self._gram_cache: Dict[Tuple[int, str], Tuple[Array, Array]] = {}
+        self._gram_cache_slots = 4
+
+    # -- recording ---------------------------------------------------
+
+    @staticmethod
+    def _check_concrete(name: str, x):
+        if isinstance(x, jax.core.Tracer):
+            raise RuntimeError(
+                f"activation tap {name!r} hit a traced value: run the "
+                "calibration forward eagerly (outside jit/scan) under "
+                "tap_capture")
+
+    def _want_hess(self, name: str) -> bool:
+        return self.want_hessian and (self._hess_names is None
+                                      or name in self._hess_names)
+
+    def _gram(self, x: Array, kind: str, compute) -> Array:
+        key = (id(x), kind)
+        hit = self._gram_cache.get(key)
+        if hit is not None and hit[0] is x:
+            return hit[1]
+        g = compute()
+        while len(self._gram_cache) >= self._gram_cache_slots:
+            self._gram_cache.pop(next(iter(self._gram_cache)))  # FIFO
+        self._gram_cache[key] = (x, g)
+        return g
+
+    def record(self, name: str, x: Array) -> None:
+        """x (..., D_in): all leading dims are token dims."""
+        self._check_concrete(name, x)
+        f = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        ss = jnp.sum(f * f, axis=0)
+        self._sumsq[name] = self._sumsq.get(name, 0.0) + ss
+        self._count[name] = self._count.get(name, 0) + f.shape[0]
+        if self._want_hess(name):
+            g = self._gram(x, "flat", lambda: f.T @ f)
+            self._hess[name] = self._hess.get(name, 0.0) + g
+
+    def record_stacked(self, name: str, x: Array, stack_axis: int) -> None:
+        """x with one stacked dim (experts) at ``stack_axis``; remaining
+        leading dims are token dims, last dim is D_in."""
+        self._check_concrete(name, x)
+        xe = jnp.moveaxis(x, stack_axis, 0)
+        e = xe.shape[0]
+        f = xe.reshape(e, -1, xe.shape[-1]).astype(jnp.float32)
+        ss = jnp.sum(f * f, axis=1)                      # (E, D)
+        self._sumsq[name] = self._sumsq.get(name, 0.0) + ss
+        # per-expert token counts: only rows actually dispatched (unused
+        # capacity slots are zero rows and must not inflate the count)
+        nz = jnp.sum(jnp.any(f != 0, axis=-1), axis=1)   # (E,)
+        self._count[name] = self._count.get(name, 0) + nz
+        if self._want_hess(name):
+            g = self._gram(x, f"stk{stack_axis}",
+                           lambda: jnp.einsum("eti,etj->eij", f, f))
+            self._hess[name] = self._hess.get(name, 0.0) + g
+
+    # -- queries -----------------------------------------------------
+
+    def names(self) -> List[str]:
+        return sorted(self._sumsq)
+
+    def has(self, name: str) -> bool:
+        return name in self._sumsq
+
+    def norms(self, name: str) -> Array:
+        return jnp.sqrt(self._sumsq[name])
+
+    def hessian(self, name: str) -> Optional[Array]:
+        return self._hess.get(name)
+
+    def token_count(self, name: str):
+        """Recorded token rows: an int for flat taps, an (E,) array of
+        per-expert dispatched counts for stacked taps."""
+        return self._count.get(name, 0)
+
+
+@contextlib.contextmanager
+def tap_capture(hessian: bool = False,
+                hessian_names: Optional[set] = None):
+    """Activate activation recording for the enclosed eager forward."""
+    cap = TapCapture(hessian=hessian, hessian_names=hessian_names)
+    _tap_captures().append(cap)
+    try:
+        yield cap
+    finally:
+        _tap_captures().remove(cap)
+
+
+@contextlib.contextmanager
+def tap_scope(prefix: str):
+    """Push a name component: taps inside record as '<prefix>.<leaf>'."""
+    stack = _tap_prefix()
+    stack.append(prefix)
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def tap_active() -> bool:
+    return bool(_tap_captures())
+
+
+def _full_tap_name(leaf: str) -> str:
+    pre = _tap_prefix()
+    return ".".join(pre + [leaf]) if pre else leaf
+
+
+def tap_record(leaf: str, x: Array) -> None:
+    """Report a linear's input under the current scope. No-op unless a
+    capture is active (the check is one empty-list test)."""
+    caps = _tap_captures()
+    if not caps:
+        return
+    name = _full_tap_name(leaf)
+    for cap in caps:
+        cap.record(name, x)
+
+
+def tap_record_stacked(leaf: str, x: Array, stack_axis: int) -> None:
+    """Per-expert variant: ``stack_axis`` indexes the expert dim."""
+    caps = _tap_captures()
+    if not caps:
+        return
+    name = _full_tap_name(leaf)
+    for cap in caps:
+        cap.record_stacked(name, x, stack_axis)
 
 
 def is_axes_leaf(x) -> bool:

@@ -32,7 +32,7 @@ from repro.models import mlp as mlp_lib
 from repro.models import moe as moe_lib
 from repro.models.common import (ArchConfig, embed_init, dense_init,
                                  is_axes_leaf, positions_for, rms_norm,
-                                 softmax_xent)
+                                 softmax_xent, tap_scope)
 
 Array = jax.Array
 AUX_LOSS_WEIGHT = 0.01
@@ -143,10 +143,15 @@ def active_param_count(cfg: ArchConfig) -> int:
 
 def _shared_block(cfg: ArchConfig, sp: dict, h: Array, positions: Array
                   ) -> Array:
-    a = attn_lib.multihead_attention(
-        cfg, sp["attn"], rms_norm(h, sp["attn_norm"], cfg.norm_eps), positions)
-    h = h + a
-    m = mlp_lib.mlp(cfg, sp["mlp"], rms_norm(h, sp["mlp_norm"], cfg.norm_eps))
+    with tap_scope("shared"):
+        with tap_scope("attn"):
+            a = attn_lib.multihead_attention(
+                cfg, sp["attn"], rms_norm(h, sp["attn_norm"], cfg.norm_eps),
+                positions)
+        h = h + a
+        with tap_scope("mlp"):
+            m = mlp_lib.mlp(cfg, sp["mlp"],
+                            rms_norm(h, sp["mlp_norm"], cfg.norm_eps))
     return h + m
 
 
@@ -157,22 +162,32 @@ def _layer_fwd(cfg: ArchConfig, params: dict, lp: dict, idx: Array,
     if cfg.family in ("ssm", "hybrid"):
         if cfg.family == "hybrid" and cfg.attn_every:
             apply_attn = (idx % cfg.attn_every) == (cfg.attn_every - 1)
-            h = jax.lax.cond(
-                apply_attn,
-                lambda hh: _shared_block(cfg, params["shared_attn"], hh,
-                                         positions),
-                lambda hh: hh, h)
-        h = h + mamba_lib.mamba_block(
-            cfg, lp["mamba"], rms_norm(h, lp["norm"], cfg.norm_eps))
+            if isinstance(apply_attn, jax.core.Tracer):
+                h = jax.lax.cond(
+                    apply_attn,
+                    lambda hh: _shared_block(cfg, params["shared_attn"], hh,
+                                             positions),
+                    lambda hh: hh, h)
+            elif bool(apply_attn):
+                # concrete layer index (eager calibration path): run the
+                # shared block un-traced so activation taps see values
+                h = _shared_block(cfg, params["shared_attn"], h, positions)
+        with tap_scope("mamba"):
+            h = h + mamba_lib.mamba_block(
+                cfg, lp["mamba"], rms_norm(h, lp["norm"], cfg.norm_eps))
         return h, aux
-    a = attn_lib.multihead_attention(
-        cfg, lp["attn"], rms_norm(h, lp["attn_norm"], cfg.norm_eps), positions)
+    with tap_scope("attn"):
+        a = attn_lib.multihead_attention(
+            cfg, lp["attn"], rms_norm(h, lp["attn_norm"], cfg.norm_eps),
+            positions)
     h = h + a
     hin = rms_norm(h, lp["mlp_norm"], cfg.norm_eps)
     if cfg.family == "moe":
-        y, aux = moe_lib.moe_ffn(cfg, lp["moe"], hin)
+        with tap_scope("moe"):
+            y, aux = moe_lib.moe_ffn(cfg, lp["moe"], hin)
     else:
-        y = mlp_lib.mlp(cfg, lp["mlp"], hin)
+        with tap_scope("mlp"):
+            y = mlp_lib.mlp(cfg, lp["mlp"], hin)
     return h + y, aux
 
 
@@ -304,28 +319,36 @@ def cache_axes(cfg: ArchConfig) -> LayerCache:
 def _layer_decode(cfg: ArchConfig, params: dict, lp: dict, idx: Array,
                   h: Array, kv_l, positions: Array):
     if cfg.family in ("ssm", "hybrid"):
-        y, mc = mamba_lib.mamba_decode_step(
-            cfg, lp["mamba"], rms_norm(h, lp["norm"], cfg.norm_eps), kv_l)
+        with tap_scope("mamba"):
+            y, mc = mamba_lib.mamba_decode_step(
+                cfg, lp["mamba"], rms_norm(h, lp["norm"], cfg.norm_eps), kv_l)
         return h + y, mc
-    a, kc = attn_lib.decode_attention(
-        cfg, lp["attn"], rms_norm(h, lp["attn_norm"], cfg.norm_eps),
-        kv_l, positions)
+    with tap_scope("attn"):
+        a, kc = attn_lib.decode_attention(
+            cfg, lp["attn"], rms_norm(h, lp["attn_norm"], cfg.norm_eps),
+            kv_l, positions)
     h = h + a
     hin = rms_norm(h, lp["mlp_norm"], cfg.norm_eps)
     if cfg.family == "moe":
-        y, _ = moe_lib.moe_ffn(cfg, lp["moe"], hin)
+        with tap_scope("moe"):
+            y, _ = moe_lib.moe_ffn(cfg, lp["moe"], hin)
     else:
-        y = mlp_lib.mlp(cfg, lp["mlp"], hin)
+        with tap_scope("mlp"):
+            y = mlp_lib.mlp(cfg, lp["mlp"], hin)
     return h + y, kc
 
 
 def _shared_block_decode(cfg: ArchConfig, sp: dict, h: Array,
                          kv: attn_lib.KVCache, positions: Array):
-    a, kv = attn_lib.decode_attention(
-        cfg, sp["attn"], rms_norm(h, sp["attn_norm"], cfg.norm_eps),
-        kv, positions)
-    h = h + a
-    m = mlp_lib.mlp(cfg, sp["mlp"], rms_norm(h, sp["mlp_norm"], cfg.norm_eps))
+    with tap_scope("shared"):
+        with tap_scope("attn"):
+            a, kv = attn_lib.decode_attention(
+                cfg, sp["attn"], rms_norm(h, sp["attn_norm"], cfg.norm_eps),
+                kv, positions)
+        h = h + a
+        with tap_scope("mlp"):
+            m = mlp_lib.mlp(cfg, sp["mlp"],
+                            rms_norm(h, sp["mlp_norm"], cfg.norm_eps))
     return h + m, kv
 
 

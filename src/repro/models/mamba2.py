@@ -127,10 +127,13 @@ def mamba_block(cfg: ArchConfig, p: dict, x: Array) -> Array:
     """Full-sequence SSD block. x (B, S, D) -> (B, S, D)."""
     b, s, d = x.shape
     h, pd, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
-    z = linear(x, p["in_z"])
-    xs = jax.nn.silu(_causal_conv(linear(x, p["in_x"]), p["conv_x"]))
-    bmat = jax.nn.silu(_causal_conv(x @ p["in_b"], p["conv_b"]))
-    cmat = jax.nn.silu(_causal_conv(x @ p["in_c"], p["conv_c"]))
+    z = linear(x, p["in_z"], tap="in_z")
+    xs = jax.nn.silu(_causal_conv(linear(x, p["in_x"], tap="in_x"),
+                                  p["conv_x"]))
+    bmat = jax.nn.silu(_causal_conv(linear(x, p["in_b"], tap="in_b"),
+                                    p["conv_b"]))
+    cmat = jax.nn.silu(_causal_conv(linear(x, p["in_c"], tap="in_c"),
+                                    p["conv_c"]))
     dt = jax.nn.softplus(x.astype(jnp.float32) @ p["in_dt"] + p["dt_bias"])
     a = -jnp.exp(p["a_log"])
 
@@ -139,7 +142,7 @@ def mamba_block(cfg: ArchConfig, p: dict, x: Array) -> Array:
     y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
     y = y.reshape(b, s, cfg.d_inner).astype(cfg.dtype)
     y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
-    return linear(y, p["out"])
+    return linear(y, p["out"], tap="out")
 
 
 # ------------------------------------------------------------------
@@ -183,10 +186,13 @@ def mamba_decode_step(cfg: ArchConfig, p: dict, x: Array, cache: MambaCache
     b = x.shape[0]
     xt = x[:, 0, :]
     h, pd, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
-    z = linear(xt, p["in_z"])
-    wx, xconv = _conv_step(cache.conv_x, linear(xt, p["in_x"]), p["conv_x"])
-    wb, bconv = _conv_step(cache.conv_b, xt @ p["in_b"], p["conv_b"])
-    wc, cconv = _conv_step(cache.conv_c, xt @ p["in_c"], p["conv_c"])
+    z = linear(xt, p["in_z"], tap="in_z")
+    wx, xconv = _conv_step(cache.conv_x, linear(xt, p["in_x"], tap="in_x"),
+                           p["conv_x"])
+    wb, bconv = _conv_step(cache.conv_b, linear(xt, p["in_b"], tap="in_b"),
+                           p["conv_b"])
+    wc, cconv = _conv_step(cache.conv_c, linear(xt, p["in_c"], tap="in_c"),
+                           p["conv_c"])
     xs = jax.nn.silu(xconv).reshape(b, h, pd).astype(jnp.float32)
     bvec = jax.nn.silu(bconv).astype(jnp.float32)                 # (B, N)
     cvec = jax.nn.silu(cconv).astype(jnp.float32)                 # (B, N)
@@ -201,4 +207,5 @@ def mamba_decode_step(cfg: ArchConfig, p: dict, x: Array, cache: MambaCache
         xs * p["d_skip"][None, :, None]
     y = y.reshape(b, cfg.d_inner).astype(cfg.dtype)
     y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
-    return linear(y, p["out"])[:, None, :], MambaCache(wx, wb, wc, h_new)
+    return (linear(y, p["out"], tap="out")[:, None, :],
+            MambaCache(wx, wb, wc, h_new))

@@ -40,8 +40,9 @@ def init_mlp(cfg: ArchConfig, key: Array, d_ff: int | None = None):
 
 def mlp(cfg: ArchConfig, p: dict, x: Array) -> Array:
     if is_gated(cfg.act):
-        h = jax.nn.silu(linear(x, p["w_gate"])) * linear(x, p["w_up"])
+        h = jax.nn.silu(linear(x, p["w_gate"], tap="w_gate")) * \
+            linear(x, p["w_up"], tap="w_up")
     else:
         kind = "gelu" if cfg.act == "gelu" else "relu2"
-        h = activation(linear(x, p["w_up"]), kind)
-    return linear(h, p["w_down"])
+        h = activation(linear(x, p["w_up"], tap="w_up"), kind)
+    return linear(h, p["w_down"], tap="w_down")

@@ -20,7 +20,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import ArchConfig, dense_init
+from repro.models.common import (ArchConfig, dense_init, tap_record,
+                                 tap_record_stacked, tap_scope)
 from repro.models import mlp as mlp_lib
 
 Array = jax.Array
@@ -70,6 +71,7 @@ def moe_ffn(cfg: ArchConfig, p: dict, x: Array) -> Tuple[Array, Array]:
     c = capacity(cfg, tpg)
 
     xt = x.reshape(g, tpg, d)
+    tap_record("router", xt)
     logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)                      # (G,T,E)
 
@@ -95,8 +97,14 @@ def moe_ffn(cfg: ArchConfig, p: dict, x: Array) -> Tuple[Array, Array]:
     combine = dispatch * gates[..., None].astype(xt.dtype)
 
     expert_in = jnp.einsum("gtec,gtd->gecd", dispatch, xt)        # (G,E,C,D)
+    # per-expert taps at the per-expert matmul site: each expert's stats
+    # see exactly the dispatched-token subset it serves (capacity drops
+    # included), with unused capacity slots contributing zero rows.
+    tap_record_stacked("w_gate", expert_in, stack_axis=1)
+    tap_record_stacked("w_up", expert_in, stack_axis=1)
     h = jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"])
     h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"])
+    tap_record_stacked("w_down", h, stack_axis=1)
     expert_out = jnp.einsum("gecf,efd->gecd", h, p["w_down"])     # (G,E,C,D)
     y = jnp.einsum("gtec,gecd->gtd", combine, expert_out)
     y = y.reshape(b, s, d)
@@ -107,5 +115,6 @@ def moe_ffn(cfg: ArchConfig, p: dict, x: Array) -> Tuple[Array, Array]:
     aux = e * jnp.sum(frac_tokens * frac_probs)
 
     if cfg.shared_ff:
-        y = y + mlp_lib.mlp(cfg.with_(act="swiglu"), p["shared"], x)
+        with tap_scope("shared"):
+            y = y + mlp_lib.mlp(cfg.with_(act="swiglu"), p["shared"], x)
     return y, aux

@@ -1,13 +1,43 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the
 real single-CPU device; only tests/test_dryrun.py (subprocess) and the
 sharding tests (their own 8-device subprocess config) use fake devices.
+
+Also provides importorskip-style stand-ins for ``hypothesis`` (``given``
+/ ``settings`` / ``strategies``) so property-based tests collect and
+skip cleanly on machines without it, instead of erroring at collection.
 """
 import os
+import types
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+
+def settings(**kwargs):
+    """No-op @settings stand-in (hypothesis not installed)."""
+    return lambda f: f
+
+
+def given(*args, **kwargs):
+    """@given stand-in: the test collects but skips."""
+    def deco(f):
+        def skipper():        # no params: hypothesis args aren't fixtures
+            pytest.skip("hypothesis not installed")
+        skipper.__name__ = f.__name__
+        skipper.__doc__ = f.__doc__
+        return skipper
+    return deco
+
+
+def _any_strategy(*args, **kwargs):
+    return None
+
+
+strategies = types.SimpleNamespace(
+    sampled_from=_any_strategy, floats=_any_strategy,
+    integers=_any_strategy, booleans=_any_strategy, lists=_any_strategy)
 
 
 @pytest.fixture(scope="session")

@@ -8,6 +8,10 @@ import textwrap
 
 import pytest
 
+# every test here spawns an 8-fake-device subprocess that recompiles from
+# scratch — minutes of wall clock, excluded from the fast tier
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

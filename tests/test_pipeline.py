@@ -71,6 +71,7 @@ def test_compress_other_families(family_arch):
     assert not bool(jnp.any(jnp.isnan(logits)))
 
 
+@pytest.mark.slow
 def test_slab_degrades_less_than_magnitude_on_trained_model():
     """Train a tiny LM for real, then compare compression damage: the
     paper's headline result at miniature scale. SLaB(50%) must lose less

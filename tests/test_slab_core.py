@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:        # property tests skip without hypothesis
+    from conftest import given, settings, strategies as st
 
 from repro.core import baselines, packing, scores, slab, sparsity
 from repro.core.apply import slab_linear, slab_linear_packed

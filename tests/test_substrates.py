@@ -7,7 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:        # property tests skip without hypothesis
+    from conftest import given, settings, strategies as st
 
 from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
 from repro.data import SyntheticCorpus, calibration_batch, host_shard

@@ -1,0 +1,194 @@
+"""Activation-tap subsystem: the single source of truth for calibration
+statistics. Tapped ‖X‖₂ / X^T X must match independently hand-wired
+references, MoE per-expert taps must see exactly the dispatched-token
+subsets, and SparseGPT must now run end-to-end on every family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import scores
+from repro.core.pipeline import compress_model, layer_tap_stats, linear_paths
+from repro.core.slab import SLaBConfig
+from repro.data import calibration_batch
+from repro.models import lm
+from repro.models import moe as moe_lib
+from repro.models.common import (positions_for, rms_norm, rotate,
+                                 tap_capture, tap_scope)
+
+
+def _ref_attention_context(cfg, ap, hn, positions):
+    """Independent (non-chunked, einsum) attention up to the wo input."""
+    b, s, _ = hn.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+    q = (hn @ ap["wq"]).reshape(b, s, h, dh)
+    k = (hn @ ap["wk"]).reshape(b, s, kv, dh)
+    v = (hn @ ap["wv"]).reshape(b, s, kv, dh)
+    q = rotate(cfg, q, positions)
+    k = rotate(cfg, k, positions)
+    g = h // kv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    q = q * (dh ** -0.5)
+    logits = jnp.einsum("bqhd,bshd->bhqs", q, k,
+                        preferred_element_type=jnp.float32)
+    ii = jnp.arange(s)
+    logits = jnp.where((ii[:, None] >= ii[None, :])[None, None],
+                       logits, -1e30)
+    probs = jax.nn.softmax(logits, -1).astype(cfg.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", probs, v).reshape(b, s, cfg.d_q)
+
+
+def test_dense_tap_norms_match_handwired_reference():
+    """Tapped norms for every dense-family linear — including attn.wo,
+    whose stats used to be 'approximate' — equal a hand-wired rewiring
+    of the layer to tight tolerance; tapped Hessians equal X^T X."""
+    cfg = configs.get("llama2_7b", smoke=True).with_(dtype=jnp.float32)
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    cal = calibration_batch(cfg.vocab, n_seq=2, seq_len=32)
+    h = lm.embed_inputs(cfg, params, jnp.asarray(cal))
+    positions = positions_for(cfg, h.shape[0], h.shape[1])
+    lp = jax.tree.map(lambda a: a[0], params["layers"])
+
+    acts, hess = layer_tap_stats(cfg, params, lp, 0, h, positions,
+                                 hessian=True)
+    assert set(acts) == set(linear_paths(cfg))
+
+    hn = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+    ref = {p: scores.act_col_norms(hn)
+           for p in ("attn.wq", "attn.wk", "attn.wv")}
+    ctx = _ref_attention_context(cfg, lp["attn"], hn, positions)
+    ref["attn.wo"] = scores.act_col_norms(ctx)
+    h2 = h + ctx @ lp["attn"]["wo"]
+    hm = rms_norm(h2, lp["mlp_norm"], cfg.norm_eps)
+    ref["mlp.w_gate"] = scores.act_col_norms(hm)
+    ref["mlp.w_up"] = scores.act_col_norms(hm)
+    mid = jax.nn.silu(hm @ lp["mlp"]["w_gate"]) * (hm @ lp["mlp"]["w_up"])
+    ref["mlp.w_down"] = scores.act_col_norms(mid)
+
+    for pth, want in ref.items():
+        np.testing.assert_allclose(np.asarray(acts[pth]), np.asarray(want),
+                                   rtol=2e-5, atol=1e-5, err_msg=pth)
+
+    flat = hn.reshape(-1, hn.shape[-1]).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(hess["attn.wq"]),
+                               np.asarray(flat.T @ flat),
+                               rtol=2e-5, atol=1e-4)
+    fm = mid.reshape(-1, mid.shape[-1]).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(hess["mlp.w_down"]),
+                               np.asarray(fm.T @ fm),
+                               rtol=2e-5, atol=1e-4)
+
+
+def test_moe_expert_taps_see_only_dispatched_tokens():
+    """Per-expert tap stats equal the column norms of exactly the token
+    subset routed to that expert — an engineered router makes the
+    routing decision known in closed form."""
+    e_cnt = 4
+    cfg = configs.get("deepseek_moe_16b", smoke=True).with_(
+        dtype=jnp.float32, n_experts=e_cnt, top_k=1, shared_ff=0,
+        capacity_factor=float(e_cnt))   # capacity >= tokens: no drops
+    key = jax.random.PRNGKey(3)
+    d = cfg.d_model
+    x = jax.random.normal(key, (1, 48, d), jnp.float32)
+    p, _ = moe_lib.init_moe(cfg, jax.random.PRNGKey(4))
+    # router: logit_e = 100 * x[..., e] -> expert = argmax of first E feats
+    router = jnp.zeros((d, e_cnt), jnp.float32)
+    router = router.at[jnp.arange(e_cnt), jnp.arange(e_cnt)].set(100.0)
+    p["router"] = router
+
+    with tap_capture(hessian=True) as tap:
+        moe_lib.moe_ffn(cfg, p, x)
+
+    xs = np.asarray(x).reshape(-1, d)
+    owner = np.argmax(xs[:, :e_cnt], axis=-1)
+    got = np.asarray(tap.norms("w_gate"))            # (E, D)
+    assert got.shape == (e_cnt, d)
+    for e in range(e_cnt):
+        sub = xs[owner == e]
+        want = np.sqrt((sub ** 2).sum(0)) if len(sub) else np.zeros(d)
+        np.testing.assert_allclose(got[e], want, rtol=1e-5, atol=1e-5,
+                                   err_msg=f"expert {e}")
+        hz = np.asarray(tap.hessian("w_gate"))[e]
+        np.testing.assert_allclose(hz, sub.T @ sub if len(sub)
+                                   else np.zeros((d, d)),
+                                   rtol=1e-4, atol=1e-4)
+    # w_down taps live in the expert hidden space, per expert
+    assert np.asarray(tap.norms("w_down")).shape == (e_cnt, cfg.d_ff)
+    # per-expert token counts exclude padded capacity slots
+    counts = np.asarray(tap.token_count("w_gate"))
+    np.testing.assert_array_equal(
+        counts, np.bincount(owner, minlength=e_cnt))
+
+
+def test_hybrid_shared_block_taps_are_scoped():
+    """On a shared-attention layer of the hybrid family, taps record the
+    shared transformer block under 'shared.*' and the Mamba block under
+    'mamba.*' — distinct names, no collisions."""
+    cfg = configs.get("zamba2_7b", smoke=True).with_(dtype=jnp.float32)
+    assert cfg.attn_every > 0
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    cal = calibration_batch(cfg.vocab, n_seq=1, seq_len=16)
+    h = lm.embed_inputs(cfg, params, jnp.asarray(cal))
+    positions = positions_for(cfg, h.shape[0], h.shape[1])
+    idx = cfg.attn_every - 1                    # shared block fires here
+    lp = jax.tree.map(lambda a: a[idx], params["layers"])
+    with tap_capture() as tap:
+        lm._layer_fwd(cfg, params, lp, jnp.asarray(idx), h, positions)
+    names = set(tap.names())
+    assert {"mamba.in_z", "mamba.in_x", "mamba.out"} <= names
+    assert {"shared.attn.wq", "shared.attn.wo", "shared.mlp.w_down"} <= names
+    # non-shared layer: no shared.* taps
+    lp0 = jax.tree.map(lambda a: a[0], params["layers"])
+    with tap_capture() as tap0:
+        lm._layer_fwd(cfg, params, lp0, jnp.asarray(0), h, positions)
+    assert not any(n.startswith("shared.") for n in tap0.names())
+
+
+@pytest.mark.parametrize("family_arch", ["deepseek_moe_16b", "mamba2_1_3b"])
+def test_sparsegpt_end_to_end_on_nondense_families(family_arch):
+    """SparseGPT used to be dense-only (no Hessian wiring for MoE/SSM);
+    tapped per-family Hessians make it run everywhere."""
+    cfg = configs.get(family_arch, smoke=True).with_(dtype=jnp.float32)
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    cal = calibration_batch(cfg.vocab, n_seq=2, seq_len=32)
+    new, stats = compress_model(cfg, params, cal, method="sparsegpt",
+                                scfg=SLaBConfig(cr=0.5))
+    assert len(stats) == cfg.n_layers * len(linear_paths(cfg))
+    assert all(s.err_before > 0 for s in stats)
+    t = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    logits, _ = lm.forward(cfg, new, t)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    # weights actually pruned: substantially zeroed, and the survivors
+    # differ from the originals (SparseGPT's OBS error propagation)
+    for pth in linear_paths(cfg):
+        w_old = params["layers"]
+        w_new = new["layers"]
+        for k in pth.split("."):
+            w_old, w_new = w_old[k], w_new[k]
+        assert float(jnp.mean(w_new == 0)) > 0.2, pth
+        assert not bool(jnp.all(w_new == w_old)), pth
+
+
+def test_tap_capture_requires_eager_forward():
+    """A tap hit inside traced code must fail loudly, not silently
+    record garbage."""
+    from repro.core.packed_model import linear
+    w = jnp.ones((8, 4), jnp.float32)
+    x = jnp.ones((3, 8), jnp.float32)
+    with tap_capture():
+        with pytest.raises(RuntimeError, match="traced"):
+            jax.jit(lambda a: linear(a, w, tap="wq"))(x)
+
+
+def test_taps_are_noop_without_capture():
+    """Tagged linears outside a capture record nothing and tap scopes
+    add nothing."""
+    from repro.core.packed_model import linear
+    w = jnp.ones((8, 4), jnp.float32)
+    x = jnp.ones((3, 8), jnp.float32)
+    with tap_scope("attn"):
+        y = jax.jit(lambda a: linear(a, w, tap="wq"))(x)   # jit-safe
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w))
