@@ -3,29 +3,26 @@
 without W_B needs large rank; SLaB's rank-1 ⊙ binary beats it)."""
 from __future__ import annotations
 
-from repro.core.pipeline import compress_model
+from repro.core.plan import plan_for_method
 from repro.core.slab import SLaBConfig
-from repro.data import calibration_batch
 
-from benchmarks.common import emit, evaluate, trained_model
+from benchmarks.common import compress_with_plan, emit, evaluate
 
 RANKS = [0, 1, 4, 16]
 
 
 def run():
-    cfg, params = trained_model()
-    cal = calibration_batch(cfg.vocab, n_seq=16, seq_len=128)
     rows = []
     for r in RANKS:
         scfg = SLaBConfig(cr=0.5, iters=4, include_binary=False,
                           include_lowrank=r > 0, rank=max(r, 1))
-        new, _ = compress_model(cfg, params, cal, method="slab", scfg=scfg)
+        cfg, new, _, _ = compress_with_plan(plan_for_method("slab", scfg))
         rows.append({"variant": f"sparse+lowrank r={r}",
                      **evaluate(cfg, new)})
         print(rows[-1], flush=True)
     # SLaB rank-1 with binary, for contrast
-    new, _ = compress_model(cfg, params, cal, method="slab",
-                            scfg=SLaBConfig(cr=0.5, iters=4))
+    cfg, new, _, _ = compress_with_plan(
+        plan_for_method("slab", SLaBConfig(cr=0.5, iters=4)))
     rows.append({"variant": "SLaB r=1 (with W_B)", **evaluate(cfg, new)})
     print(rows[-1], flush=True)
     emit("fig1", rows)

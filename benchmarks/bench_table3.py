@@ -3,13 +3,10 @@
 """
 from __future__ import annotations
 
-import time
-
-from repro.core.pipeline import compress_model
+from repro.core.plan import plan_for_method
 from repro.core.slab import SLaBConfig
-from repro.data import calibration_batch
 
-from benchmarks.common import emit, evaluate, trained_model
+from benchmarks.common import compress_with_plan, emit, evaluate
 
 VARIANTS = [
     ("W_S", SLaBConfig(cr=0.5, pattern="2:4", iters=4,
@@ -23,15 +20,11 @@ VARIANTS = [
 
 
 def run():
-    cfg, params = trained_model()
-    cal = calibration_batch(cfg.vocab, n_seq=16, seq_len=128)
     rows = []
     for name, scfg in VARIANTS:
-        t0 = time.monotonic()
-        new, _ = compress_model(cfg, params, cal, method="slab", scfg=scfg)
+        cfg, new, _, dt = compress_with_plan(plan_for_method("slab", scfg))
         r = evaluate(cfg, new)
-        rows.append({"variant": name, **r,
-                     "compress_s": time.monotonic() - t0})
+        rows.append({"variant": name, **r, "compress_s": dt})
         print(rows[-1], flush=True)
     emit("table3", rows)
     return rows

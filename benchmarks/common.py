@@ -23,6 +23,7 @@ import numpy as np
 
 from repro import configs
 from repro.core.pipeline import compress_model
+from repro.core.plan import plan_for_method
 from repro.core.slab import SLaBConfig
 from repro.data import SyntheticCorpus, calibration_batch
 from repro.models import lm
@@ -70,17 +71,26 @@ def evaluate(cfg, params) -> Dict[str, float]:
     return {"ppl": float(np.exp(tot_nll / n)), "acc": 100 * tot_acc / n}
 
 
-def compress_and_eval(method: str, cr: float, pattern: Optional[str],
-                      iters: int = 8,
-                      group=(1, 0)) -> Dict[str, float]:
+def compress_with_plan(plan) -> Tuple[object, dict, list, float]:
+    """Compress the cached trained model under ``plan`` (anything
+    ``CompressionPlan.parse`` accepts). Returns (cfg, params, stats,
+    compress_seconds) — the timer covers only the compression run, not
+    model training/loading or calibration setup."""
     jax.clear_caches()      # each variant compiles fresh shapes; don't
     cfg, params = trained_model()   # accumulate executables across a sweep
     cal = calibration_batch(cfg.vocab, n_seq=16, seq_len=128)
     t0 = time.monotonic()
+    new, stats = compress_model(cfg, params, cal, plan=plan)
+    return cfg, new, stats, time.monotonic() - t0
+
+
+def compress_and_eval(method: str, cr: float, pattern: Optional[str],
+                      iters: int = 8,
+                      group=(1, 0)) -> Dict[str, float]:
     scfg = SLaBConfig(cr=cr, pattern=pattern, iters=iters, group=group)
-    new, _ = compress_model(cfg, params, cal, method=method, scfg=scfg)
+    cfg, new, _, dt = compress_with_plan(plan_for_method(method, scfg))
     out = evaluate(cfg, new)
-    out["compress_s"] = time.monotonic() - t0
+    out["compress_s"] = dt
     return out
 
 

@@ -12,7 +12,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.core import compressor
 from repro.core.pipeline import compress_model, linear_paths
+from repro.core.plan import plan_for_method
 from repro.core.slab import SLaBConfig
 from repro.data import SyntheticCorpus, calibration_batch
 from repro.models import lm
@@ -49,17 +51,20 @@ def main():
         return float(np.exp(tot / 3))
 
     print(f"dense ppl (untrained: ~ln V baseline): {quality(params):.2f}")
-    # sparsegpt runs on every family now that Hessians come from taps
-    for method in ("slab", "wanda", "sparsegpt", "magnitude"):
+    print(f"registered compressors: {compressor.available()}")
+    # every registered method runs on every family: per-need Hessians
+    # (sparsegpt, hassle) come from the same taps
+    for method in ("slab", "wanda", "sparsegpt", "hassle", "magnitude"):
         scfg = SLaBConfig(cr=args.cr, pattern=args.pattern,
                           iters=args.iters)
-        new, stats = compress_model(cfg, params, cal, method=method,
-                                    scfg=scfg,
+        new, stats = compress_model(cfg, params, cal,
+                                    plan=plan_for_method(method, scfg),
                                     progress=lambda s: None)
         # relative activation-weighted reconstruction error: err_after
         # against the zero-approximation baseline err_before
         rel = [s.err_after / s.err_before for s in stats if s.err_before]
-        print(f"{method:10s} CR={args.cr:.0%} ppl={quality(new):8.2f} "
+        cr_meas = np.mean([s.cr for s in stats])
+        print(f"{method:10s} CR={cr_meas:.1%} ppl={quality(new):8.2f} "
               f"rel-recon-err={np.mean(rel):.4f}")
 
 

@@ -39,6 +39,17 @@ err_w = float(jnp.linalg.norm(w - w_wanda) / jnp.linalg.norm(w))
 print(f"wanda@same budget:      {err_w:.4f}  "
       f"(SLaB recovers {100 * (1 - err / err_w):.1f}% of its error)")
 
+# --- the same decomposition through the compressor registry -----------
+# (core.compressor is the pluggable API the compression pipeline uses;
+#  plans route each linear to a registered compressor by name)
+from repro.core import compressor
+print(f"registered compressors: {compressor.available()}")
+slab_c = compressor.get("slab", cfg)
+cl = slab_c.compress(w, compressor.LinearStats(norms=act_norms))
+print(f"registry slab:          measured CR {cl.cr:.4f}, "
+      f"dense-equivalent matches: "
+      f"{bool(jnp.allclose(cl.dense, reconstruct(dec)))}")
+
 # --- serve it ----------------------------------------------------------
 x = jax.random.normal(jax.random.PRNGKey(2), (8, d_in))
 y_ref = x @ reconstruct(dec).T

@@ -28,9 +28,12 @@ def main():
 
     cal = calibration_batch(cfg.vocab, n_seq=8, seq_len=64)
     t0 = time.monotonic()
-    params_c, stats = compress_model(cfg, params, cal, method="slab",
-                                     scfg=SLaBConfig(cr=0.5, iters=8))
-    print(f"compressed {len(stats)} linears in {time.monotonic()-t0:.1f}s")
+    # plan API: one catch-all rule (equivalent to method="slab" sugar)
+    params_c, stats = compress_model(cfg, params, cal,
+                                     plan="*=slab@cr=0.5,iters=8")
+    cr_meas = float(np.mean([s.cr for s in stats]))
+    print(f"compressed {len(stats)} linears (measured CR={cr_meas:.3f}) "
+          f"in {time.monotonic()-t0:.1f}s")
 
     # storage accounting on one layer's wq
     w = params["layers"]["attn"]["wq"][0].T.astype(jnp.float32)

@@ -17,6 +17,7 @@ import numpy as np
 
 from repro import configs
 from repro.core.pipeline import compress_model
+from repro.core.plan import CalibrationSpec, plan_for_method
 from repro.core.slab import SLaBConfig
 from repro.data import SyntheticCorpus, calibration_batch
 from repro.launch.train import train
@@ -72,10 +73,13 @@ def main():
     ppl_dense = eval_ppl(cfg, params)
     print(f"dense ppl: {ppl_dense:.3f}  (uniform would be {cfg.vocab})")
 
-    cal = calibration_batch(cfg.vocab, n_seq=8, seq_len=128)
+    # stream the calibration set through the tap capture in chunks of 4
+    # sequences (statistics accumulate across chunks)
+    cal = CalibrationSpec(calibration_batch(cfg.vocab, n_seq=8,
+                                            seq_len=128), batch_size=4)
     for method in ("slab", "wanda"):
-        new, _ = compress_model(cfg, params, cal, method=method,
-                                scfg=SLaBConfig(cr=0.5, iters=8))
+        plan = plan_for_method(method, SLaBConfig(cr=0.5, iters=8))
+        new, _ = compress_model(cfg, params, cal, plan=plan)
         print(f"{method}@CR50 ppl: {eval_ppl(cfg, new):.3f}")
 
 

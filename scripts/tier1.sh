@@ -6,6 +6,9 @@
 #   scripts/tier1.sh core       # kernel/core edit loop (~1 min): SLaB
 #                               # decomposition, Pallas kernels, taps,
 #                               # flash-decode, HLO analysis
+#   scripts/tier1.sh pipeline   # compression-policy loop: compressor
+#                               # registry, plans, layer-wise pipeline,
+#                               # taps (mixed-method e2e stays @slow)
 #   scripts/tier1.sh <pytest args...>   # anything else passes through
 #
 # The full suite (the tier-1 gate, incl. @slow) stays:
@@ -20,5 +23,11 @@ if [ "${1:-}" = "core" ]; then
         tests/test_slab_core.py tests/test_substrates.py \
         tests/test_kernels.py tests/test_flash_decode.py \
         tests/test_taps.py tests/test_perf_features.py "$@"
+fi
+
+if [ "${1:-}" = "pipeline" ]; then
+    shift
+    exec python -m pytest -q -m "not slow" \
+        tests/test_plan.py tests/test_pipeline.py tests/test_taps.py "$@"
 fi
 exec python -m pytest -q -m "not slow" "$@"

@@ -10,3 +10,14 @@ from repro.core.slab import (  # noqa: F401
     slab_decompose,
 )
 from repro.core.apply import slab_linear, slab_linear_packed, to_dense  # noqa: F401
+from repro.core.compressor import (  # noqa: F401
+    CompressedLinear,
+    Compressor,
+    LinearStats,
+)
+from repro.core.plan import (  # noqa: F401
+    CalibrationSpec,
+    CompressionPlan,
+    PlanRule,
+    plan_for_method,
+)

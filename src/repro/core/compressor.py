@@ -1,0 +1,263 @@
+"""Pluggable per-linear weight compressors: protocol + registry.
+
+A ``Compressor`` turns one weight matrix (paper convention: (D_out,
+D_in)) plus its tapped calibration statistics into a ``CompressedLinear``
+— a dense equivalent for XLA serving, an optional structured
+decomposition for the packed Pallas path, and the *measured* compression
+ratio. Compressors declare which statistics they need via ``needs``
+(subset of {"norms", "hessian"}); the pipeline taps exactly those, so a
+plan that routes every linear to Wanda never pays for O(T·D²) Gram
+accumulation.
+
+Registering a new method needs zero edits to ``core.pipeline``::
+
+    from repro.core import compressor
+
+    @compressor.register("mymethod")
+    class MyCompressor(compressor.Compressor):
+        needs = frozenset({"norms"})
+
+        def compress(self, w, stats):
+            out = ...                       # (D_out, D_in) fp32
+            return compressor.CompressedLinear(out, None, measured_cr)
+
+then select it from any plan rule: ``"mlp.*=mymethod@cr=0.6"``.
+
+Built-ins: ``slab`` (Algorithm 1), the paper's baselines ``wanda`` /
+``magnitude`` / ``sparsegpt``, and ``hassle`` — a HASSLE-free-style
+alternating sparse + low-rank decomposition (Makni et al. 2025) driven
+by the per-linear X^T X the taps already collect, shipped as proof the
+extension point carries a genuinely new solver.
+"""
+from __future__ import annotations
+
+from typing import Dict, FrozenSet, NamedTuple, Optional, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as base_lib
+from repro.core.slab import (SLaBConfig, SLaBDecomposition,
+                             compression_ratio, keep_fraction, reconstruct,
+                             slab_decompose)
+
+Array = jax.Array
+
+
+class LinearStats(NamedTuple):
+    """Per-linear calibration statistics from the activation taps.
+
+    norms   : (D_in,) ‖X_j‖₂ column norms, or None if not collected.
+    hessian : (D_in, D_in) Gram matrix X^T X, or None unless the
+              compressor's ``needs`` requested it.
+    """
+
+    norms: Optional[Array] = None
+    hessian: Optional[Array] = None
+
+
+class CompressedLinear(NamedTuple):
+    """Result of compressing one (D_out, D_in) weight matrix.
+
+    dense : (D_out, D_in) fp32 dense equivalent (what XLA serves).
+    dec   : structured decomposition for the packed kernel path, or
+            None for pruning-only methods.
+    cr    : measured compression ratio (Eq. 9 for decompositions, zero
+            fraction for pure pruning); None if not computable.
+    """
+
+    dense: Array
+    dec: Optional[SLaBDecomposition] = None
+    cr: Optional[float] = None
+
+
+class Compressor:
+    """Protocol for per-linear compression methods.
+
+    Subclasses set ``needs`` (which tap statistics to collect) and
+    implement ``compress(w, stats)``. ``w`` arrives as (D_out, D_in)
+    fp32; per-rule hyper-parameters come in as a ``SLaBConfig`` (the
+    shared bundle: cr / pattern / group / iters / rank / bits), extra
+    keyword options are forwarded to ``__init__``.
+    """
+
+    name: str = ""
+    needs: FrozenSet[str] = frozenset()
+
+    def __init__(self, scfg: SLaBConfig = SLaBConfig()):
+        self.scfg = scfg
+
+    def compress(self, w: Array, stats: LinearStats) -> CompressedLinear:
+        raise NotImplementedError
+
+
+# ------------------------------------------------------------------
+# Registry
+# ------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[Compressor]] = {}
+
+
+def register(name: str):
+    """Class decorator: ``@register("mymethod")``."""
+
+    def deco(cls: Type[Compressor]) -> Type[Compressor]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get(name: str, scfg: SLaBConfig = SLaBConfig(), **kw) -> Compressor:
+    """Instantiate a registered compressor by name."""
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown compressor {name!r}; "
+                       f"available: {available()}")
+    return _REGISTRY[name](scfg, **kw)
+
+
+def available() -> list:
+    return sorted(_REGISTRY)
+
+
+# ------------------------------------------------------------------
+# Built-ins
+# ------------------------------------------------------------------
+
+def _pruned_cr(dense: Array) -> float:
+    """Measured CR of a pruning-only result: the zero fraction (pruned
+    values cost nothing, survivors keep their full bit-width)."""
+    return float(jnp.mean(dense == 0))
+
+
+@register("slab")
+class SLaBCompressor(Compressor):
+    """Paper Algorithm 1: W ≈ W_S + W_L ⊙ W_B (incl. ablation modes)."""
+
+    needs = frozenset({"norms"})
+
+    def compress(self, w: Array, stats: LinearStats) -> CompressedLinear:
+        dec = slab_decompose(w, stats.norms, self.scfg)
+        return CompressedLinear(reconstruct(dec), dec,
+                                compression_ratio(dec, self.scfg.bits))
+
+
+@register("wanda")
+class WandaCompressor(Compressor):
+    """|W| · ‖X‖₂ scoring, no weight update (Sun et al. 2023)."""
+
+    needs = frozenset({"norms"})
+
+    def compress(self, w: Array, stats: LinearStats) -> CompressedLinear:
+        an = (stats.norms if stats.norms is not None
+              else jnp.ones((w.shape[1],), jnp.float32))
+        out = base_lib.wanda_prune(w, an, 1.0 - self.scfg.cr,
+                                   group=self.scfg.group,
+                                   pattern=self.scfg.pattern)
+        return CompressedLinear(out, None, _pruned_cr(out))
+
+
+@register("magnitude")
+class MagnitudeCompressor(Compressor):
+    """|W| scoring; needs no calibration statistics at all."""
+
+    needs = frozenset()
+
+    def compress(self, w: Array, stats: LinearStats) -> CompressedLinear:
+        out = base_lib.magnitude_prune(w, 1.0 - self.scfg.cr,
+                                       group=self.scfg.group,
+                                       pattern=self.scfg.pattern)
+        return CompressedLinear(out, None, _pruned_cr(out))
+
+
+@register("sparsegpt")
+class SparseGPTCompressor(Compressor):
+    """Hessian-aware OBS pruning with error propagation."""
+
+    needs = frozenset({"hessian"})
+
+    def compress(self, w: Array, stats: LinearStats) -> CompressedLinear:
+        if stats.hessian is None:
+            raise ValueError("sparsegpt needs the tapped X^T X Hessian")
+        out = base_lib.sparsegpt_prune(w, stats.hessian,
+                                       1.0 - self.scfg.cr,
+                                       pattern=self.scfg.pattern)
+        return CompressedLinear(out, None, _pruned_cr(out))
+
+
+@register("hassle")
+class HassleFreeCompressor(Compressor):
+    """HASSLE-free-style alternating sparse + low-rank decomposition:
+    W ≈ W_S + U Vᵀ, no binary component (Makni et al. 2025).
+
+    Both subproblems are solved in the calibration metric H = X^T X
+    (tr(E H Eᵀ) = ‖E L_c‖_F² for H = L_c L_cᵀ):
+
+      L-step: rank-r truncated SVD of (W − W_S) L_c, mapped back
+              through L_c⁻¹ — the optimal low-rank update under the
+              Hessian-weighted Frobenius norm;
+      S-step: SparseGPT OBS pruning of the residual W − U Vᵀ under the
+              same Hessian, at the Eq.-10 keep fraction that charges
+              the rank-r factors against the CR budget.
+
+    ``rank`` comes from ``scfg.rank``; ``alt_iters`` controls the
+    alternation count (each round pays one SVD + one OBS sweep).
+    """
+
+    needs = frozenset({"norms", "hessian"})
+
+    def __init__(self, scfg: SLaBConfig = SLaBConfig(),
+                 alt_iters: int = 3, percdamp: float = 0.01):
+        super().__init__(scfg)
+        self.alt_iters = int(alt_iters)
+        self.percdamp = float(percdamp)
+
+    def compress(self, w: Array, stats: LinearStats) -> CompressedLinear:
+        if stats.hessian is None:
+            raise ValueError("hassle needs the tapped X^T X Hessian")
+        d_out, d_in = w.shape
+        r = max(self.scfg.rank, 1)
+        frac = keep_fraction(self.scfg.cr, self.scfg.bits, d_out, d_in,
+                             rank=r, include_binary=False,
+                             include_lowrank=True)
+
+        h = np.array(stats.hessian, dtype=np.float64).copy()
+        dead = np.diag(h) == 0
+        h[dead, dead] = 1.0
+        h[np.arange(d_in), np.arange(d_in)] += (
+            self.percdamp * float(np.mean(np.diag(h))))
+        lc = np.linalg.cholesky(h)                       # H = L_c L_cᵀ
+
+        w64 = np.array(w, dtype=np.float64)
+        w64[:, dead] = 0.0
+        w_s = np.zeros_like(w64)
+        low = np.zeros_like(w64)
+        u_f = np.zeros((d_out, r))
+        v_f = np.zeros((d_in, r))
+        for _ in range(max(self.alt_iters, 1)):
+            m = (w64 - w_s) @ lc
+            um, sv, vtm = np.linalg.svd(m, full_matrices=False)
+            um, sv, vtm = um[:, :r], sv[:r], vtm[:r]
+            mr = (um * sv[None, :]) @ vtm                # (D_out, D_in)
+            low = np.linalg.solve(lc.T, mr.T).T          # M_r L_c⁻¹
+            root = np.sqrt(np.maximum(sv, 0.0))
+            u_f = um * root[None, :]
+            v_f = np.linalg.solve(lc.T, vtm.T) * root[None, :]
+            w_s = np.asarray(
+                base_lib.sparsegpt_prune(
+                    jnp.asarray(w64 - low, jnp.float32),
+                    jnp.asarray(h, jnp.float32), frac,
+                    pattern=self.scfg.pattern,
+                    percdamp=self.percdamp),
+                dtype=np.float64)
+
+        dec = SLaBDecomposition(
+            w_s=jnp.asarray(w_s, jnp.float32),
+            u=jnp.asarray(u_f, jnp.float32),
+            v=jnp.asarray(v_f, jnp.float32),
+            w_b=jnp.zeros((0, 0), jnp.int8))             # no binary term
+        dense = jnp.asarray(w_s + low, jnp.float32)
+        return CompressedLinear(dense, dec,
+                                compression_ratio(dec, self.scfg.bits))

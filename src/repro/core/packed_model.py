@@ -82,6 +82,38 @@ def linear(x: Array, w, tap: Optional[str] = None) -> Array:
     return x @ w
 
 
+def pack_plan_decs(params: dict,
+                   decs: Dict[Tuple[int, str], SLaBDecomposition],
+                   n_layers: int, plan) -> Tuple[dict, int, list]:
+    """Pack the kernel-servable subset of a (possibly mixed-method)
+    plan's decompositions: rank-1 decs with a binary term, full layer
+    coverage per path, and one sparse format per path — the pattern
+    each dec's resolved plan rule actually compressed with. Everything
+    else stays on the dense XLA path. Returns
+    (params, n_linears_packed, packed_paths)."""
+    servable = {k: v for k, v in decs.items()
+                if v.w_b is not None and v.w_b.size       # has W_B
+                and v.u is not None and v.u.size          # has W_L
+                and (v.u.ndim == 1 or v.u.shape[1] == 1)}  # rank 1
+    pat_of = {}
+    for (l, name) in servable:
+        r = plan.resolve(l, name)
+        pat_of[(l, name)] = r.scfg.pattern if r is not None else None
+    coverage: Dict[str, int] = {}
+    for (_, name) in servable:
+        coverage[name] = coverage.get(name, 0) + 1
+    paths = {name for name, n in coverage.items()
+             if n == n_layers
+             and len({pat_of[k] for k in servable if k[1] == name}) == 1}
+    n_packed = 0
+    for pat in {pat_of[(0, name)] for name in paths}:
+        sub = {k: v for k, v in servable.items()
+               if k[1] in paths and pat_of[k] == pat}
+        params = pack_model(params, sub, n_layers, pattern=pat)
+        n_packed += len(sub)
+    return params, n_packed, sorted(paths)
+
+
 def pack_model(params: dict,
                decs: Dict[Tuple[int, str], SLaBDecomposition],
                n_layers: int,

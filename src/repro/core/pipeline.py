@@ -1,39 +1,42 @@
 """Layer-wise one-shot compression driver (the SparseGPT/Wanda protocol
 the paper follows, §II-A1), with calibration statistics sourced from
-**activation taps** — not from re-implemented layer math.
+**activation taps** and per-linear policy from a **CompressionPlan**.
 
   for each transformer layer, in order:
-    (1) forward the calibration set through the *already-compressed*
-        prefix to the layer's inputs,
+    (1) forward the calibration set — streamed in CalibrationSpec
+        chunks — through the *already-compressed* prefix to the layer's
+        inputs,
     (2) run the layer's REAL forward (``models.lm._layer_fwd``) under
-        ``models.common.tap_capture``: the ``linear()`` dispatch
+        one ``models.common.tap_capture``: the ``linear()`` dispatch
         chokepoint reports every linear's exact input, reduced on the
-        fly to ‖X‖₂ column norms and (for SparseGPT / when requested)
-        X^T X Hessians,
-    (3) decompose every linear in the layer (SLaB / a baseline) from
-        those tapped stats,
+        fly to ‖X‖₂ column norms and — only for linears whose resolved
+        compressor declares ``"hessian" in needs`` — X^T X Hessians,
+        accumulated across all calibration chunks,
+    (3) resolve every linear through the plan (ordered glob rules over
+        layer index + ``linear_paths`` names) and compress it with the
+        matched registry compressor at the rule's config,
     (4) replace the weights and continue forward with the compressed
         layer's outputs (error propagation).
 
 The tap protocol: modules name their linears (``linear(x, w,
 tap="wq")``) under scope prefixes pushed by the layer assembly
-("attn", "mlp", "moe", "moe.shared", "mamba"), so tap names equal the
-``linear_paths`` entries below by construction. One source of truth —
-attention, MoE dispatch (per-expert stats see exactly the
-dispatched-token subsets, capacity drops included), the Mamba-2 SSD
-scan, and the hybrid shared block are never re-derived here, every
-family gets exact ``attn.wo``-style downstream stats, and Hessians are
-available for all families (dense, MoE per-expert, SSM, hybrid).
-Future scoring variants (HASSLE-free alternating updates, SoLA-style
-soft sparsity) plug in at the same chokepoint without touching model
-code.
+("attn", "mlp", "moe", "moe.shared", "mamba", "shared"), so tap names
+equal the ``linear_paths`` / ``shared_linear_paths`` entries below by
+construction. One source of truth — attention, MoE dispatch (per-expert
+stats see exactly the dispatched-token subsets, capacity drops
+included), the Mamba-2 SSD scan, and the hybrid shared block are never
+re-derived here. New scoring variants plug in through
+``core.compressor.register`` + a plan rule, with zero edits to this
+file.
 
 Works on the model zoo's stacked-params layout: weights live as
 ``params["layers"][...]`` leaves with a leading L dim; we slice layer l,
 compress its 2-D linears, and write them back. MoE experts are
-compressed per-expert with expert-specific activation statistics: the
-dispatched-token subset that actually reaches each expert is what feeds
-its ‖X‖₂ and X^T X.
+compressed per-expert with expert-specific activation statistics. The
+hybrid (zamba2) *shared* transformer block lives outside the stack
+(``params["shared_attn"]``) and is compressed once, at its first firing
+layer, from that invocation's ``shared.*`` taps — later invocations
+then run (and propagate error through) the compressed shared weights.
 
 Per the paper, embeddings and the LM head are excluded (§III-A4); norms,
 biases and other 1-D leaves are untouched.
@@ -41,15 +44,16 @@ biases and other 1-D leaves are untouched.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines as base_lib
+from repro.core import plan as plan_lib
 from repro.core import scores as scores_lib
-from repro.core.slab import SLaBConfig, slab_decompose, reconstruct
+from repro.core.compressor import LinearStats
+from repro.core.slab import SLaBConfig
 from repro.models import lm
 from repro.models.common import ArchConfig, positions_for, tap_capture
 
@@ -62,7 +66,8 @@ class CompressStats:
     name: str
     err_before: float   # ‖W diag(n)‖_F — the zero-approximation baseline
     err_after: float    # ‖(W - Ŵ) diag(n)‖_F with the same tapped norms
-    cr: float
+    cr: float           # measured compression ratio (requested if unknown)
+    method: str = ""
 
 
 def _get(d: dict, path: str):
@@ -99,22 +104,31 @@ def linear_paths(cfg: ArchConfig) -> List[str]:
     return paths
 
 
-def layer_tap_stats(cfg: ArchConfig, params: dict, lp: dict, idx: int,
-                    h: Array, positions: Array, hessian: bool = False
-                    ) -> Tuple[Dict[str, Array], Dict[str, Array]]:
-    """Run layer ``idx``'s real forward under an activation-tap capture.
+def shared_linear_paths(cfg: ArchConfig) -> List[str]:
+    """Hybrid (zamba2) shared-transformer-block linears. They live in
+    ``params["shared_attn"]`` (outside the stacked layers) and tap as
+    ``shared.*`` at layers where the block fires."""
+    if cfg.family != "hybrid" or not cfg.attn_every:
+        return []
+    # the shared block is a plain attn+mlp transformer block: reuse the
+    # dense-family path list under the "shared." tap scope
+    return ["shared." + p for p in linear_paths(cfg.with_(family="dense"))]
 
-    Returns ``(act_norms, hessians)`` keyed by ``linear_paths`` names:
-    norms are (D_in,) — stacked (E, D_in) for MoE experts — and
-    Hessians X^T X are (D_in, D_in) / (E, D_in, D_in); ``hessians`` is
-    empty unless ``hessian=True``.
-    """
-    with tap_capture(hessian=hessian,
-                     hessian_names=set(linear_paths(cfg))) as tap:
-        lm._layer_fwd(cfg, params, lp, jnp.asarray(idx), h, positions)
+
+def _capture_layer(cfg: ArchConfig, params: dict, lp: dict, idx: int,
+                   chunks: Sequence[Array], positions: Sequence[Array],
+                   paths: Sequence[str], hessian_names: set
+                   ) -> Tuple[Dict[str, Array], Dict[str, Array]]:
+    """Run layer ``idx``'s real forward over every calibration chunk
+    under ONE activation-tap capture: statistics accumulate across
+    chunks (streaming multi-batch calibration)."""
+    with tap_capture(hessian=bool(hessian_names),
+                     hessian_names=set(hessian_names)) as tap:
+        for h, pos in zip(chunks, positions):
+            lm._layer_fwd(cfg, params, lp, jnp.asarray(idx), h, pos)
     acts: Dict[str, Array] = {}
     hess: Dict[str, Array] = {}
-    for pth in linear_paths(cfg):
+    for pth in paths:
         if not tap.has(pth):
             continue
         acts[pth] = tap.norms(pth)
@@ -124,47 +138,45 @@ def layer_tap_stats(cfg: ArchConfig, params: dict, lp: dict, idx: int,
     return acts, hess
 
 
-def _compress_matrix(w: Array, act_norms: Optional[Array], method: str,
-                     scfg: SLaBConfig, hessian: Optional[Array] = None
-                     ) -> Tuple[Array, Optional[object]]:
-    """Returns (compressed dense equivalent, SLaBDecomposition or None).
-    ``w`` is stored (D_in, D_out) in our models — transpose to the
-    paper's (D_out, D_in) convention and back."""
-    wt = w.T.astype(jnp.float32)
-    dec = None
-    if method == "slab":
-        dec = slab_decompose(wt, act_norms, scfg)
-        out = reconstruct(dec)
-    elif method == "wanda":
-        # Wanda at CR c keeps (1-c) of weights (no side components)
-        out = base_lib.wanda_prune(
-            wt, act_norms if act_norms is not None
-            else jnp.ones((wt.shape[1],), jnp.float32),
-            1.0 - scfg.cr, group=scfg.group, pattern=scfg.pattern)
-    elif method == "sparsegpt":
-        assert hessian is not None
-        out = base_lib.sparsegpt_prune(wt, hessian, 1.0 - scfg.cr,
-                                       pattern=scfg.pattern)
-    elif method == "magnitude":
-        out = base_lib.magnitude_prune(wt, 1.0 - scfg.cr,
-                                       group=scfg.group,
-                                       pattern=scfg.pattern)
-    else:
-        raise ValueError(method)
-    return out.T.astype(w.dtype), dec
+def layer_tap_stats(cfg: ArchConfig, params: dict, lp: dict, idx: int,
+                    h: Array, positions: Array, hessian: bool = False,
+                    hessian_names: Optional[set] = None
+                    ) -> Tuple[Dict[str, Array], Dict[str, Array]]:
+    """Single-batch convenience wrapper around ``_capture_layer``.
+
+    Returns ``(act_norms, hessians)`` keyed by ``linear_paths`` /
+    ``shared_linear_paths`` names: norms are (D_in,) — stacked (E, D_in)
+    for MoE experts — and Hessians X^T X are (D_in, D_in) /
+    (E, D_in, D_in); ``hessians`` is empty unless requested.
+    """
+    paths = linear_paths(cfg) + shared_linear_paths(cfg)
+    names = set(paths) if hessian and hessian_names is None \
+        else set(hessian_names or ())
+    return _capture_layer(cfg, params, lp, idx, [h], [positions],
+                          paths, names)
 
 
-def _expert_hessian(hess: Optional[Array], e: int, d_in: int
-                    ) -> Optional[Array]:
-    """Slice expert ``e``'s Hessian; an expert that saw no calibration
+def _expert_hessians(hz: Optional[Array], n_exp: int, d_in: int
+                     ) -> List[Optional[Array]]:
+    """Per-expert Hessian slices. An expert that saw no calibration
     tokens (all-zero Gram) falls back to the identity, which reduces
-    SparseGPT to magnitude pruning instead of zeroing the expert."""
-    if hess is None:
-        return None
-    hz = hess[e] if hess.ndim == 3 else hess
-    if float(jnp.trace(hz)) == 0.0:
-        return jnp.eye(d_in, dtype=jnp.float32)
-    return hz
+    Hessian-aware methods to magnitude pruning instead of zeroing the
+    expert. The zero-Gram check reads every expert's trace in a single
+    device->host transfer."""
+    if hz is None:
+        return [None] * n_exp
+    per = [hz[e] if hz.ndim == 3 else hz for e in range(n_exp)]
+    tr = np.asarray(jnp.trace(hz, axis1=-2, axis2=-1)).reshape(-1)
+    eye: Optional[Array] = None
+    out: List[Optional[Array]] = []
+    for e in range(n_exp):
+        if tr[e if tr.size > 1 else 0] == 0.0:
+            if eye is None:
+                eye = jnp.eye(d_in, dtype=jnp.float32)
+            out.append(eye)
+        else:
+            out.append(per[e])
+    return out
 
 
 def _weighted_errs(w: Array, w_new: Array, an: Optional[Array]
@@ -181,65 +193,130 @@ def _weighted_errs(w: Array, w_new: Array, an: Optional[Array]
     return err_b, err_a
 
 
-def compress_model(cfg: ArchConfig, params: dict, calib_tokens: np.ndarray,
+def _compress_leaf(layer: int, pth: str, w: Array, an: Optional[Array],
+                   hz: Optional[Array],
+                   r: plan_lib.ResolvedCompression):
+    """Compress one parameter leaf (2-D linear or 3-D stacked experts).
+    Returns (new weight, dec-or-None, CompressStats). Weights are stored
+    (D_in, D_out) in our models — transposed to the paper's (D_out,
+    D_in) convention for the compressor and back."""
+    comp = r.compressor
+    if w.ndim == 3:        # MoE experts (E, D, F): per-expert
+        hz_e = _expert_hessians(hz, w.shape[0], w.shape[1])
+        outs, crs = [], []
+        eb2 = ea2 = 0.0
+        for e in range(w.shape[0]):
+            an_e = an[e] if (an is not None and an.ndim == 2) else an
+            cl = comp.compress(w[e].T.astype(jnp.float32),
+                               LinearStats(norms=an_e, hessian=hz_e[e]))
+            o = cl.dense.T.astype(w.dtype)
+            outs.append(o)
+            if cl.cr is not None:
+                crs.append(cl.cr)
+            b_e, a_e = _weighted_errs(w[e], o, an_e)
+            eb2 += b_e ** 2
+            ea2 += a_e ** 2
+        w_new = jnp.stack(outs)
+        cr = float(np.mean(crs)) if crs else comp.scfg.cr
+        st = CompressStats(layer, pth, float(np.sqrt(eb2)),
+                           float(np.sqrt(ea2)), cr, r.method)
+        return w_new, None, st
+    cl = comp.compress(w.T.astype(jnp.float32),
+                       LinearStats(norms=an, hessian=hz))
+    w_new = cl.dense.T.astype(w.dtype)
+    err_b, err_a = _weighted_errs(w, w_new, an)
+    cr = cl.cr if cl.cr is not None else comp.scfg.cr
+    return w_new, cl.dec, CompressStats(layer, pth, err_b, err_a, cr,
+                                        r.method)
+
+
+def compress_model(cfg: ArchConfig, params: dict, calib,
                    method: str = "slab",
                    scfg: SLaBConfig = SLaBConfig(),
+                   plan=None,
                    collect_hessian: bool = False,
                    progress: Optional[Callable[[str], None]] = None,
                    keep_decompositions: bool = False):
     """Run the layer-wise protocol. Returns (new params, stats[, decs]).
 
-    ``calib_tokens`` (N, S) int32 (or (N, S, D) embeds for stub-frontend
-    families). Hessians (X^T X) are tapped only for SparseGPT (or when
-    ``collect_hessian`` forces it) — for every family, including MoE
-    (per-expert) and SSM. ``keep_decompositions`` additionally returns
-    {(layer, path): dec} for core.packed_model.pack_model (kernel-served
-    packed weights)."""
+    ``calib`` is an (N, S) int32 array (or (N, S, D) embeds for
+    stub-frontend families), or a ``plan.CalibrationSpec`` to stream it
+    in chunks (tap statistics accumulate across chunks). ``plan`` is
+    anything ``CompressionPlan.parse`` accepts (a plan, inline DSL,
+    JSON, a rule list); when None, ``method``/``scfg`` act as sugar for
+    a single catch-all rule. Hessians (X^T X) are tapped only for
+    linears whose resolved compressor declares ``"hessian" in needs``
+    (or when ``collect_hessian`` forces it). ``keep_decompositions``
+    additionally returns {(layer, path): dec} for
+    core.packed_model.pack_model (kernel-served packed weights)."""
+    plan = (plan_lib.CompressionPlan.parse(plan, base=scfg)
+            if plan is not None else plan_lib.plan_for_method(method, scfg))
+    spec = (calib if isinstance(calib, plan_lib.CalibrationSpec)
+            else plan_lib.CalibrationSpec(np.asarray(calib)))
+
     stats: List[CompressStats] = []
     decs: Dict[Tuple[int, str], object] = {}
-    x = jnp.asarray(calib_tokens)
-    h = lm.embed_inputs(cfg, params, x)
-    b, s = h.shape[0], h.shape[1]
-    positions = positions_for(cfg, b, s)
+    params = dict(params)   # top-level copy: shared_attn swapped in place
+    chunks: List[Array] = []
+    positions: List[Array] = []
+    for t in spec.batches():
+        h = lm.embed_inputs(cfg, params, jnp.asarray(t))
+        chunks.append(h)
+        positions.append(positions_for(cfg, h.shape[0], h.shape[1]))
     new_layers = jax.tree.map(lambda a: a, params["layers"])  # shallow copy
-    want_hess = collect_hessian or method == "sparsegpt"
+    shared_pending = bool(cfg.family == "hybrid" and cfg.attn_every
+                          and "shared_attn" in params)
 
     for l in range(cfg.n_layers):
         lp = jax.tree.map(lambda a: a[l], params["layers"])
-        acts, hess = layer_tap_stats(cfg, params, lp, l, h, positions,
-                                     hessian=want_hess)
+        paths = linear_paths(cfg)
+        shared_now = (shared_pending
+                      and l % cfg.attn_every == cfg.attn_every - 1)
+        tap_paths = paths + (shared_linear_paths(cfg) if shared_now else [])
+        resolved = {p: plan.resolve(l, p) for p in tap_paths}
+        hess_names = {p for p, r in resolved.items()
+                      if r is not None and "hessian" in r.needs}
+        if collect_hessian:
+            hess_names = set(tap_paths)
+        acts, hess = _capture_layer(cfg, params, lp, l, chunks, positions,
+                                    tap_paths, hess_names)
 
-        for pth in linear_paths(cfg):
+        for pth in paths:
+            r = resolved[pth]
             w = _get(lp, pth)
-            if w is None:
+            if r is None or w is None:
                 continue
-            an = acts.get(pth)
-            if w.ndim == 3:        # MoE experts (E, D, F): per-expert
-                outs, eb2, ea2 = [], 0.0, 0.0
-                for e in range(w.shape[0]):
-                    an_e = an[e] if (an is not None and an.ndim == 2) else an
-                    o, _ = _compress_matrix(
-                        w[e], an_e, method, scfg,
-                        _expert_hessian(hess.get(pth), e, w.shape[1]))
-                    outs.append(o)
-                    b_e, a_e = _weighted_errs(w[e], o, an_e)
-                    eb2 += b_e ** 2
-                    ea2 += a_e ** 2
-                w_new = jnp.stack(outs)
-                err_b, err_a = float(np.sqrt(eb2)), float(np.sqrt(ea2))
-            else:
-                w_new, dec = _compress_matrix(w, an, method, scfg,
-                                              hess.get(pth))
-                if keep_decompositions and dec is not None:
-                    decs[(l, pth)] = dec
-                err_b, err_a = _weighted_errs(w, w_new, an)
-            stats.append(CompressStats(l, pth, err_b, err_a, scfg.cr))
+            w_new, dec, st = _compress_leaf(l, pth, w, acts.get(pth),
+                                            hess.get(pth), r)
+            if keep_decompositions and dec is not None:
+                decs[(l, pth)] = dec
+            stats.append(st)
             _set(lp, pth, w_new)
+
+        if shared_now:
+            sp = jax.tree.map(lambda a: a, params["shared_attn"])
+            changed = False
+            for pth in shared_linear_paths(cfg):
+                r = resolved[pth]
+                sub = pth.split(".", 1)[1]       # strip the "shared." scope
+                w = _get(sp, sub)
+                if r is None or w is None:
+                    continue
+                w_new, _, st = _compress_leaf(l, pth, w, acts.get(pth),
+                                              hess.get(pth), r)
+                stats.append(st)
+                _set(sp, sub, w_new)
+                changed = True
+            if changed:
+                params["shared_attn"] = sp
+            shared_pending = False   # one-shot: first firing layer only
 
         # write back and propagate through the *compressed* layer
         new_layers = jax.tree.map(
             lambda buf, leaf: buf.at[l].set(leaf), new_layers, lp)
-        h, _ = lm._layer_fwd(cfg, params, lp, jnp.asarray(l), h, positions)
+        for i in range(len(chunks)):
+            chunks[i], _ = lm._layer_fwd(cfg, params, lp, jnp.asarray(l),
+                                         chunks[i], positions[i])
         if progress:
             progress(f"layer {l + 1}/{cfg.n_layers} compressed")
 

@@ -1,0 +1,297 @@
+"""CompressionPlan: per-linear compression policy as ordered glob rules.
+
+The paper's quality comes from activation-aware, *per-layer* decisions;
+a plan makes that a first-class object instead of one global
+``method=`` string. A plan is an ordered rule list; each rule matches
+``linear_paths`` names (glob) plus an optional layer range, and resolves
+to a registered compressor with per-rule hyper-parameters. First match
+wins; unmatched linears stay dense.
+
+Spec formats (``CompressionPlan.parse`` accepts all of them):
+
+inline DSL — ``;``-separated ``[layers/]pattern=method[@k=v,...]``::
+
+    attn.*=sparsegpt; moe.shared.*=slab@cr=0.4; mamba.out=skip; *=slab
+    0-3/mlp.*=wanda@pattern=2:4; *=slab        # layers 0..3 only
+
+JSON — a list of rule objects (or ``{"base": {...}, "rules": [...]}``;
+loose keys are per-rule options)::
+
+    [{"match": "attn.*", "method": "sparsegpt", "layers": "0-3"},
+     {"match": "*", "method": "slab", "cr": 0.4, "pattern": "2:4"}]
+
+``@/path/to/plan.json`` loads the JSON from a file. Layer ranges:
+``"2"``, ``"0-3"``, ``"5-"`` (open end), ``"-2"``, comma-separated
+unions. Option values are JSON literals where possible (``cr=0.4`` →
+float), bare strings otherwise (``pattern=2:4``). Options naming
+``SLaBConfig`` fields override the plan's base config; anything else is
+forwarded to the compressor's constructor (e.g. ``alt_iters`` for
+``hassle``).
+
+``CalibrationSpec`` rides along: it wraps the calibration token array
+with a streaming chunk size, so the pipeline can drive ``TapCapture``'s
+cross-``record`` accumulation with many calibration batches without
+materializing one giant forward.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import functools
+import json
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core import compressor as compressor_lib
+from repro.core.slab import SLaBConfig
+
+_SKIP_METHODS = ("skip", "none")
+_SCFG_FIELDS = {f.name for f in dataclasses.fields(SLaBConfig)}
+
+
+@functools.lru_cache(maxsize=256)
+def _parse_layer_spec(spec: str) -> Tuple[Tuple[int, Optional[int]], ...]:
+    """``"0-3,7,12-"`` -> ((0, 3), (7, 7), (12, None)) inclusive ranges."""
+    out: List[Tuple[int, Optional[int]]] = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "-" in part:
+            lo_s, hi_s = part.split("-", 1)
+            lo = int(lo_s) if lo_s.strip() else 0
+            hi = int(hi_s) if hi_s.strip() else None
+            out.append((lo, hi))
+        else:
+            v = int(part)
+            out.append((v, v))
+    if not out:
+        raise ValueError(f"empty layer spec {spec!r}")
+    return tuple(out)
+
+
+def _layers_match(layers, layer: int) -> bool:
+    if layers is None:
+        return True
+    if isinstance(layers, int):
+        return layer == layers
+    if isinstance(layers, (list, tuple)):
+        return layer in layers
+    return any(lo <= layer and (hi is None or layer <= hi)
+               for lo, hi in _parse_layer_spec(str(layers)))
+
+
+def _coerce(v: str) -> Any:
+    try:
+        return json.loads(v)
+    except (json.JSONDecodeError, ValueError):
+        return v
+
+
+@dataclasses.dataclass
+class PlanRule:
+    """One policy rule: glob over linear-path names + layer range ->
+    compressor name + per-rule options."""
+
+    match: str                                # glob, e.g. "attn.*"
+    method: str                               # registry name or "skip"
+    layers: Union[str, int, Sequence[int], None] = None
+    options: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def matches(self, layer: int, path: str) -> bool:
+        return (fnmatch.fnmatchcase(path, self.match)
+                and _layers_match(self.layers, layer))
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedCompression:
+    """What a plan hands the pipeline for one (layer, path)."""
+
+    method: str
+    compressor: compressor_lib.Compressor
+
+    @property
+    def needs(self):
+        return self.compressor.needs
+
+    @property
+    def scfg(self) -> SLaBConfig:
+        return self.compressor.scfg
+
+
+class CompressionPlan:
+    """Ordered rules; ``resolve`` is first-match-wins."""
+
+    def __init__(self, rules: Sequence[PlanRule],
+                 base: SLaBConfig = SLaBConfig()):
+        self.rules = list(rules)
+        self.base = base
+        self._built: Dict[int, ResolvedCompression] = {}
+
+    def resolve(self, layer: int, path: str
+                ) -> Optional[ResolvedCompression]:
+        """Compressor for (layer, path); None = leave dense (an explicit
+        ``skip`` rule or no matching rule at all)."""
+        for i, rule in enumerate(self.rules):
+            if not rule.matches(layer, path):
+                continue
+            if rule.method in _SKIP_METHODS:
+                return None
+            if i not in self._built:
+                self._built[i] = self._build(rule)
+            return self._built[i]
+        return None
+
+    def _build(self, rule: PlanRule) -> ResolvedCompression:
+        over = {k: v for k, v in rule.options.items() if k in _SCFG_FIELDS}
+        extra = {k: v for k, v in rule.options.items()
+                 if k not in _SCFG_FIELDS}
+        if isinstance(over.get("group"), list):
+            over["group"] = tuple(over["group"])
+        scfg = dataclasses.replace(self.base, **over)
+        return ResolvedCompression(
+            rule.method, compressor_lib.get(rule.method, scfg, **extra))
+
+    def __repr__(self) -> str:
+        rs = "; ".join(
+            (f"{r.layers}/" if r.layers is not None else "")
+            + f"{r.match}={r.method}"
+            + ("@" + ",".join(f"{k}={v}" for k, v in r.options.items())
+               if r.options else "")
+            for r in self.rules)
+        return f"CompressionPlan({rs})"
+
+    # -- parsing -----------------------------------------------------
+
+    @classmethod
+    def parse(cls, spec, base: SLaBConfig = SLaBConfig()
+              ) -> "CompressionPlan":
+        if isinstance(spec, CompressionPlan):
+            return spec
+        if isinstance(spec, PlanRule):
+            return cls([spec], base)
+        if isinstance(spec, str):
+            s = spec.strip()
+            if s.startswith("@"):
+                with open(s[1:]) as f:
+                    spec = json.load(f)
+            else:
+                parsed = None
+                if s and s[0] in "{[":
+                    # looks like JSON — but a DSL rule may also start
+                    # with a fnmatch character class ("[am]*.out=skip"),
+                    # so fall back to the DSL on a parse failure
+                    try:
+                        parsed = json.loads(s)
+                    except json.JSONDecodeError:
+                        parsed = None
+                spec = (parsed if parsed is not None
+                        else [_parse_inline_rule(r)
+                              for r in s.split(";") if r.strip()])
+        if isinstance(spec, dict):
+            if "method" in spec:               # a bare single-rule object
+                spec = [spec]
+            else:
+                bover = {k: v for k, v in spec.get("base", {}).items()
+                         if k in _SCFG_FIELDS}
+                if isinstance(bover.get("group"), list):
+                    bover["group"] = tuple(bover["group"])
+                base = dataclasses.replace(base, **bover)
+                spec = spec.get("rules", [])
+        if isinstance(spec, (list, tuple)):
+            rules = [r if isinstance(r, PlanRule) else _rule_from_dict(r)
+                     for r in spec]
+            if not rules:
+                raise ValueError(
+                    "CompressionPlan spec resolved to zero rules — a "
+                    "plan that compresses nothing is almost certainly a "
+                    "spec mistake (use '*=skip' to skip everything)")
+            return cls(rules, base)
+        raise TypeError(f"cannot parse a CompressionPlan from "
+                        f"{type(spec).__name__}")
+
+
+def _split_top_level(s: str, sep: str) -> List[str]:
+    """Split on ``sep`` outside []/{}/() nesting, so JSON-literal option
+    values like ``group=[4,1]`` survive the comma split."""
+    parts: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        if ch == sep and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    parts.append("".join(cur))
+    return parts
+
+
+def _parse_inline_rule(txt: str) -> PlanRule:
+    txt = txt.strip()
+    layers = None
+    # a "/" is the layer-range separator only before the first "=" —
+    # option *values* may legitimately contain slashes (paths etc.)
+    slash, eq = txt.find("/"), txt.find("=")
+    if slash != -1 and (eq == -1 or slash < eq):
+        layers, txt = txt.split("/", 1)
+        layers = layers.strip()
+    if "=" not in txt:
+        raise ValueError(f"bad plan rule {txt!r}: expected "
+                         f"[layers/]pattern=method[@k=v,...]")
+    match, rhs = txt.split("=", 1)
+    method, _, opts = rhs.partition("@")
+    options: Dict[str, Any] = {}
+    for kv in filter(None, (p.strip() for p in _split_top_level(opts, ","))):
+        if "=" not in kv:
+            raise ValueError(f"bad option {kv!r} in plan rule {txt!r}")
+        k, v = kv.split("=", 1)
+        options[k.strip()] = _coerce(v.strip())
+    return PlanRule(match.strip(), method.strip(), layers, options)
+
+
+def _rule_from_dict(d: dict) -> PlanRule:
+    d = dict(d)
+    match = d.pop("match")
+    method = d.pop("method")
+    layers = d.pop("layers", None)
+    options = dict(d.pop("options", {}))
+    options.update(d)                      # loose keys are options
+    return PlanRule(match, method, layers, options)
+
+
+def plan_for_method(method: str, scfg: SLaBConfig = SLaBConfig()
+                    ) -> CompressionPlan:
+    """The ``method=`` sugar: one catch-all rule."""
+    return CompressionPlan([PlanRule("*", method)], base=scfg)
+
+
+# ------------------------------------------------------------------
+# Streaming calibration
+# ------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CalibrationSpec:
+    """Calibration data + streaming policy.
+
+    ``tokens`` is (N, S) int32 ids (or (N, S, D) embeds for
+    stub-frontend families). ``batch_size`` sequences are forwarded per
+    chunk; tap statistics accumulate across chunks inside one
+    ``TapCapture``, so N can exceed what a single forward fits. None
+    keeps the single-batch behavior.
+    """
+
+    tokens: Any
+    batch_size: Optional[int] = None
+
+    def batches(self) -> List[np.ndarray]:
+        t = np.asarray(self.tokens)
+        bs = self.batch_size or t.shape[0]
+        if bs <= 0:
+            raise ValueError(f"batch_size must be positive, got {bs}")
+        return [t[i:i + bs] for i in range(0, t.shape[0], bs)]

@@ -4,11 +4,19 @@ compressed weights.
   python -m repro.launch.serve --arch llama2_7b --smoke --compress slab \
       --batch 8 --prompt-len 64 --gen-len 32
 
-Pipeline: load/init params -> (optional) layer-wise SLaB compression
-with calibration data -> prefill the prompt batch -> greedy decode.
-The compressed weights can be served either as dense-equivalent swaps
-(XLA path) or through the fused Pallas kernel (--kernel, interpret-mode
-on CPU; compiled Mosaic on TPU).
+  # mixed-method per-linear policy (plan DSL, JSON, or @file.json):
+  python -m repro.launch.serve --arch deepseek_moe_16b \
+      --plan 'attn.*=sparsegpt; moe.shared.*=slab@cr=0.4; *=slab'
+
+Pipeline: load/init params -> (optional) layer-wise compression driven
+by a CompressionPlan with calibration data -> prefill the prompt batch
+-> greedy decode. ``--compress <method>`` stays as sugar for the
+single-rule plan ``*=<method>``; ``--plan`` takes anything
+``CompressionPlan.parse`` accepts and wins when both are given. The
+compressed weights can be served either as dense-equivalent swaps (XLA
+path) or through the fused Pallas kernel (--kernel, interpret-mode on
+CPU; compiled Mosaic on TPU). ``--no-smoke`` reaches the full-size
+configs.
 """
 from __future__ import annotations
 
@@ -20,7 +28,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.core import compressor as compressor_lib
 from repro.core.pipeline import compress_model
+from repro.core.plan import CompressionPlan
 from repro.core.slab import SLaBConfig
 from repro.data import SyntheticCorpus, calibration_batch
 from repro.models import lm
@@ -51,10 +61,18 @@ def greedy_decode(cfg, params, prompts: jnp.ndarray, gen_len: int):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama2_7b")
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--compress", choices=["none", "slab", "wanda",
-                                           "magnitude", "sparsegpt"],
-                    default="slab")
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="reduced smoke geometry (--no-smoke for the "
+                         "full-size config)")
+    ap.add_argument("--compress",
+                    choices=["none"] + compressor_lib.available(),
+                    default="slab",
+                    help="single-method sugar for --plan '*=<method>'")
+    ap.add_argument("--plan", default=None,
+                    help="CompressionPlan spec: inline DSL "
+                         "('attn.*=sparsegpt; *=slab@cr=0.4'), JSON, or "
+                         "@/path/to/plan.json; overrides --compress")
     ap.add_argument("--packed", action="store_true",
                     help="serve through the fused Pallas kernels (SLaB "
                          "on-HBM format; interpret mode on CPU)")
@@ -65,6 +83,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--calib-seqs", type=int, default=16)
+    ap.add_argument("--calib-batch", type=int, default=0,
+                    help="stream calibration in chunks of this many "
+                         "sequences (0 = single batch)")
     ap.add_argument("--calib-len", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -73,25 +94,40 @@ def main():
     params, _ = lm.init(cfg, jax.random.PRNGKey(args.seed))
     print(f"{cfg.name}: {lm.param_count(cfg)/1e6:.2f}M params")
 
-    if args.compress != "none":
+    scfg = SLaBConfig(cr=args.cr, pattern=args.pattern, iters=args.iters)
+    plan = (CompressionPlan.parse(args.plan, base=scfg)
+            if args.plan else None)
+    if plan is not None or args.compress != "none":
         calib = calibration_batch(cfg.vocab, seed=args.seed,
                                   n_seq=args.calib_seqs,
                                   seq_len=args.calib_len)
+        if args.calib_batch:
+            from repro.core.plan import CalibrationSpec
+            calib = CalibrationSpec(calib, batch_size=args.calib_batch)
         t0 = time.monotonic()
-        scfg = SLaBConfig(cr=args.cr, pattern=args.pattern,
-                          iters=args.iters)
-        keep = args.packed and args.compress == "slab"
         out = compress_model(cfg, params, calib, method=args.compress,
-                             scfg=scfg, keep_decompositions=keep)
+                             scfg=scfg, plan=plan,
+                             keep_decompositions=args.packed)
         params, stats = out[0], out[1]
-        print(f"compressed {len(stats)} linears at CR={args.cr} "
+        by_method = sorted({s.method for s in stats})
+        cr_meas = float(np.mean([s.cr for s in stats])) if stats else 0.0
+        print(f"compressed {len(stats)} linears "
+              f"({'/'.join(by_method)}) at measured CR={cr_meas:.3f} "
               f"in {time.monotonic() - t0:.1f}s")
-        if keep:
-            from repro.core.packed_model import pack_model
-            params = pack_model(params, out[2], cfg.n_layers,
-                                pattern=args.pattern)
-            print("serving through fused Pallas kernels "
-                  "(SLaB packed on-HBM format)")
+        if args.packed:
+            from repro.core.packed_model import pack_plan_decs
+            eff_plan = (plan if plan is not None
+                        else CompressionPlan.parse(f"*={args.compress}",
+                                                   base=scfg))
+            params, n_packed, paths = pack_plan_decs(
+                params, out[2], cfg.n_layers, eff_plan)
+            if n_packed:
+                print(f"serving {n_packed} slab-form linears "
+                      f"({len(paths)} paths) through fused Pallas "
+                      f"kernels (SLaB packed on-HBM format)")
+            else:
+                print("--packed: plan produced no packable slab-form "
+                      "decompositions; serving dense-equivalent weights")
 
     corpus = SyntheticCorpus(cfg.vocab, seed=args.seed)
     prompts = jnp.asarray(

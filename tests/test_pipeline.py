@@ -31,8 +31,8 @@ def small_model():
 def test_compress_excludes_embed_and_head(small_model):
     cfg, params = small_model
     cal = calibration_batch(cfg.vocab, n_seq=4, seq_len=32)
-    new, stats = compress_model(cfg, params, cal, method="slab",
-                                scfg=SLaBConfig(cr=0.5, iters=2))
+    new, stats = compress_model(cfg, params, cal,
+                                plan="*=slab@cr=0.5,iters=2")
     np.testing.assert_array_equal(np.asarray(new["embed"]),
                                   np.asarray(params["embed"]))
     np.testing.assert_array_equal(np.asarray(new["lm_head"]),
@@ -46,10 +46,11 @@ def test_compress_excludes_embed_and_head(small_model):
 def test_compress_touches_every_linear(small_model):
     cfg, params = small_model
     cal = calibration_batch(cfg.vocab, n_seq=4, seq_len=32)
-    new, stats = compress_model(cfg, params, cal, method="slab",
-                                scfg=SLaBConfig(cr=0.5, iters=2))
+    new, stats = compress_model(cfg, params, cal,
+                                plan="*=slab@cr=0.5,iters=2")
     n_expected = cfg.n_layers * len(linear_paths(cfg))
     assert len(stats) == n_expected
+    assert all(s.method == "slab" for s in stats)
     for pth in ("attn", "mlp"):
         for name, w in new["layers"][pth].items():
             assert not np.array_equal(np.asarray(w),
@@ -66,6 +67,9 @@ def test_compress_other_families(family_arch):
     new, stats = compress_model(cfg, params, cal, method="slab",
                                 scfg=SLaBConfig(cr=0.5, iters=1))
     assert len(stats) > 0
+    if cfg.family == "hybrid":
+        # the shared transformer block is no longer silently skipped
+        assert any(s.name.startswith("shared.") for s in stats)
     t = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
     logits, _ = lm.forward(cfg, new, t)
     assert not bool(jnp.any(jnp.isnan(logits)))

@@ -1,0 +1,349 @@
+"""Compressor registry + CompressionPlan: rule resolution, third-party
+registration through the pipeline with zero pipeline edits, mixed-method
+end-to-end runs, hybrid shared-block compression, streaming multi-batch
+calibration, and measured-CR reporting."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import compressor
+from repro.core.compressor import CompressedLinear, LinearStats
+from repro.core.pipeline import (compress_model, linear_paths,
+                                 shared_linear_paths)
+from repro.core.plan import (CalibrationSpec, CompressionPlan, PlanRule,
+                             plan_for_method)
+from repro.core.slab import SLaBConfig, compression_ratio
+from repro.data import calibration_batch
+from repro.models import lm
+from repro.models.common import positions_for, tap_capture
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = configs.get("llama2_7b", smoke=True).with_(dtype=jnp.float32)
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ------------------------------------------------------------------
+# Plan-rule resolution
+# ------------------------------------------------------------------
+
+def test_rule_precedence_glob_and_layer_ranges():
+    plan = CompressionPlan.parse(
+        "mamba.out=skip; 0-1/attn.*=sparsegpt; attn.wq=wanda; "
+        "*=slab@cr=0.4,pattern=2:4")
+    # first match wins: the layer-ranged sparsegpt rule shadows the
+    # wanda rule inside layers 0..1
+    assert plan.resolve(0, "attn.wq").method == "sparsegpt"
+    assert plan.resolve(1, "attn.wk").method == "sparsegpt"
+    # outside the range, the next matching rule applies
+    assert plan.resolve(2, "attn.wq").method == "wanda"
+    assert plan.resolve(2, "attn.wk").method == "slab"
+    # per-rule config overrides the base
+    r = plan.resolve(3, "mlp.w_up")
+    assert r.method == "slab"
+    assert r.scfg.cr == 0.4 and r.scfg.pattern == "2:4"
+    # explicit skip
+    assert plan.resolve(5, "mamba.out") is None
+    # open-ended and single-layer specs
+    plan2 = CompressionPlan.parse("3-/mlp.*=magnitude; 2/attn.*=wanda")
+    assert plan2.resolve(7, "mlp.w_up").method == "magnitude"
+    assert plan2.resolve(2, "mlp.w_up") is None       # out of range
+    assert plan2.resolve(2, "attn.wo").method == "wanda"
+    assert plan2.resolve(3, "attn.wo") is None
+    # no catch-all: unmatched linears stay dense
+    assert plan2.resolve(0, "moe.w_gate") is None
+
+
+def test_json_and_inline_specs_resolve_identically():
+    inline = CompressionPlan.parse(
+        "0-3/attn.*=sparsegpt; moe.shared.*=slab@cr=0.4; *=slab")
+    as_json = CompressionPlan.parse(json.dumps([
+        {"match": "attn.*", "method": "sparsegpt", "layers": "0-3"},
+        {"match": "moe.shared.*", "method": "slab", "cr": 0.4},
+        {"match": "*", "method": "slab"},
+    ]))
+    for layer, path in [(0, "attn.wq"), (5, "attn.wq"),
+                        (2, "moe.shared.w_gate"), (9, "mlp.w_down")]:
+        a, b = inline.resolve(layer, path), as_json.resolve(layer, path)
+        assert a.method == b.method, (layer, path)
+        assert a.scfg == b.scfg, (layer, path)
+
+
+def test_bare_rule_dict_and_empty_specs():
+    """A single rule object (not wrapped in a list) is a valid spec; a
+    spec that resolves to zero rules is a loud error, never a silent
+    compress-nothing plan."""
+    plan = CompressionPlan.parse({"match": "*", "method": "slab",
+                                  "cr": 0.4})
+    assert plan.resolve(0, "attn.wq").scfg.cr == 0.4
+    with pytest.raises(ValueError, match="zero rules"):
+        CompressionPlan.parse("")
+    with pytest.raises(ValueError, match="zero rules"):
+        CompressionPlan.parse({"rules": []})
+    with pytest.raises(ValueError, match="zero rules"):
+        CompressionPlan.parse([])
+
+
+def test_inline_options_accept_json_literals_with_commas():
+    plan = CompressionPlan.parse("*=wanda@group=[4,1],cr=0.6")
+    r = plan.resolve(0, "mlp.w_up")
+    assert r.scfg.group == (4, 1) and r.scfg.cr == 0.6
+    # "/" in an option value is not a layer-range separator; a glob
+    # starting with a character class is not JSON
+    rule = CompressionPlan.parse("*=slab@pattern=2:4; [am]*.out=skip") \
+        .rules[0]
+    assert rule.layers is None and rule.options == {"pattern": "2:4"}
+    plan2 = CompressionPlan.parse("[am]*.out=skip; *=slab")
+    assert plan2.resolve(0, "mamba.out") is None
+    assert plan2.resolve(0, "attn.wo").method == "slab"
+
+
+def test_plan_needs_drive_hessian_collection():
+    """The resolved compressor's ``needs`` decides which stats exist."""
+    assert "hessian" in compressor.get("sparsegpt").needs
+    assert "hessian" in compressor.get("hassle").needs
+    assert "hessian" not in compressor.get("slab").needs
+    assert compressor.get("magnitude").needs == frozenset()
+
+
+def test_unknown_compressor_raises_with_available_list():
+    with pytest.raises(KeyError, match="slab"):
+        compressor.get("definitely-not-registered")
+    plan = CompressionPlan.parse("*=definitely-not-registered")
+    with pytest.raises(KeyError):
+        plan.resolve(0, "attn.wq")
+
+
+# ------------------------------------------------------------------
+# Registry: third-party compressor, zero pipeline edits
+# ------------------------------------------------------------------
+
+def test_third_party_compressor_plugs_in_via_plan(small_model):
+    """A compressor registered outside core.* is selected by a plan and
+    applied by compress_model with no edits to core/pipeline.py."""
+
+    @compressor.register("halve-test")
+    class HalveCompressor(compressor.Compressor):
+        needs = frozenset()
+
+        def compress(self, w, stats):
+            return CompressedLinear(0.5 * w, None, 0.25)
+
+    try:
+        cfg, params = small_model
+        cal = calibration_batch(cfg.vocab, n_seq=2, seq_len=16)
+        new, stats = compress_model(cfg, params, cal,
+                                    plan="attn.wq=halve-test; *=skip")
+        assert [s.name for s in stats] == ["attn.wq"] * cfg.n_layers
+        assert all(s.method == "halve-test" and s.cr == 0.25
+                   for s in stats)
+        np.testing.assert_allclose(
+            np.asarray(new["layers"]["attn"]["wq"]),
+            0.5 * np.asarray(params["layers"]["attn"]["wq"]), rtol=1e-6)
+        # everything else untouched
+        np.testing.assert_array_equal(
+            np.asarray(new["layers"]["mlp"]["w_up"]),
+            np.asarray(params["layers"]["mlp"]["w_up"]))
+    finally:
+        compressor._REGISTRY.pop("halve-test", None)
+    assert "halve-test" not in compressor.available()
+
+
+# ------------------------------------------------------------------
+# Mixed-method end-to-end
+# ------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_mixed_method_plan_end_to_end(small_model):
+    """sparsegpt on attention + slab on the MLP in one run; Hessians are
+    collected only for the attention linears."""
+    cfg, params = small_model
+    cal = calibration_batch(cfg.vocab, n_seq=4, seq_len=32)
+    new, stats = compress_model(
+        cfg, params, cal,
+        plan="attn.*=sparsegpt; mlp.*=slab@iters=2")
+    by_method = {s.name.split(".")[0] for s in stats
+                 if s.method == "sparsegpt"}
+    assert by_method == {"attn"}
+    assert {s.name.split(".")[0] for s in stats if s.method == "slab"} \
+        == {"mlp"}
+    assert len(stats) == cfg.n_layers * len(linear_paths(cfg))
+    # sparsegpt actually pruned the attention weights
+    wq = np.asarray(new["layers"]["attn"]["wq"])
+    assert float(np.mean(wq == 0)) > 0.2
+    t = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    logits, _ = lm.forward(cfg, new, t)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+
+def test_hassle_beats_wanda_on_lowrank_plus_sparse_matrix():
+    """The HASSLE-free alternating compressor recovers low-rank
+    structure a pure pruner cannot, under the Hessian-weighted error
+    both optimize."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(48, 2)) @ rng.normal(size=(2, 64))
+                    + 0.3 * rng.normal(size=(48, 64)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(256, 64)), jnp.float32)
+    hess = x.T @ x
+    norms = jnp.sqrt(jnp.sum(x * x, axis=0))
+    comp = compressor.get("hassle", SLaBConfig(cr=0.5, rank=2),
+                          alt_iters=2)
+    cl = comp.compress(w, LinearStats(norms=norms, hessian=hess))
+    assert cl.dec is not None
+    assert 0.4 < cl.cr < 0.6                  # near the requested budget
+    # dense equivalent is exactly W_S + U Vᵀ
+    np.testing.assert_allclose(
+        np.asarray(cl.dense),
+        np.asarray(cl.dec.w_s + cl.dec.u @ cl.dec.v.T),
+        rtol=1e-4, atol=1e-5)
+    lc = np.linalg.cholesky(np.asarray(hess, np.float64)
+                            + 1e-6 * np.eye(64))
+    from repro.core import baselines
+    err_h = np.linalg.norm((np.asarray(w) - np.asarray(cl.dense)) @ lc)
+    err_w = np.linalg.norm(
+        (np.asarray(w) - np.asarray(baselines.wanda_prune(w, norms, 0.5)))
+        @ lc)
+    assert err_h < err_w, (err_h, err_w)
+
+
+def test_hassle_runs_through_the_pipeline(small_model):
+    cfg, params = small_model
+    cal = calibration_batch(cfg.vocab, n_seq=2, seq_len=16)
+    new, stats = compress_model(
+        cfg, params, cal, plan="attn.wo=hassle@alt_iters=1; *=skip")
+    assert [s.method for s in stats] == ["hassle"] * cfg.n_layers
+    wo = np.asarray(new["layers"]["attn"]["wo"])
+    assert not np.array_equal(wo, np.asarray(params["layers"]["attn"]["wo"]))
+    t = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    logits, _ = lm.forward(cfg, new, t)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+
+# ------------------------------------------------------------------
+# Hybrid shared block
+# ------------------------------------------------------------------
+
+def test_hybrid_shared_block_is_compressed_once():
+    """shared.* weights (outside the stacked layers) are addressed by
+    the plan like any other linear — compressed at the first firing
+    layer, exactly once, without touching the Mamba stack when the plan
+    says so."""
+    cfg = configs.get("zamba2_7b", smoke=True).with_(dtype=jnp.float32)
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    cal = calibration_batch(cfg.vocab, n_seq=2, seq_len=16)
+    new, stats = compress_model(cfg, params, cal,
+                                plan="shared.*=slab@iters=1; *=skip")
+    assert sorted(s.name for s in stats) == sorted(shared_linear_paths(cfg))
+    assert all(s.layer == cfg.attn_every - 1 for s in stats)
+    for mod in ("attn", "mlp"):
+        for name, w_old in params["shared_attn"][mod].items():
+            assert not np.array_equal(
+                np.asarray(new["shared_attn"][mod][name]),
+                np.asarray(w_old)), f"shared.{mod}.{name} unchanged"
+    # the Mamba stack was skipped by the plan
+    assert np.array_equal(np.asarray(new["layers"]["mamba"]["out"]),
+                          np.asarray(params["layers"]["mamba"]["out"]))
+    # caller's params were not mutated
+    assert new["shared_attn"] is not params["shared_attn"]
+    t = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    logits, _ = lm.forward(cfg, new, t)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+
+# ------------------------------------------------------------------
+# Streaming multi-batch calibration
+# ------------------------------------------------------------------
+
+def test_streaming_stats_match_single_batch(small_model):
+    """One tap capture over N chunked forwards accumulates the same
+    norms and Hessians as one forward over the full batch."""
+    cfg, params = small_model
+    cal = np.asarray(calibration_batch(cfg.vocab, n_seq=4, seq_len=32))
+    lp = jax.tree.map(lambda a: a[0], params["layers"])
+
+    def stats_for(chunks):
+        with tap_capture(hessian=True,
+                         hessian_names={"attn.wq", "mlp.w_down"}) as tap:
+            for c in chunks:
+                h = lm.embed_inputs(cfg, params, jnp.asarray(c))
+                pos = positions_for(cfg, h.shape[0], h.shape[1])
+                lm._layer_fwd(cfg, params, lp, jnp.asarray(0), h, pos)
+        return tap
+
+    one = stats_for([cal])
+    many = stats_for(CalibrationSpec(cal, batch_size=1).batches())
+    for name in ("attn.wq", "mlp.w_down"):
+        np.testing.assert_allclose(np.asarray(many.norms(name)),
+                                   np.asarray(one.norms(name)),
+                                   rtol=1e-5, atol=1e-6, err_msg=name)
+        np.testing.assert_allclose(np.asarray(many.hessian(name)),
+                                   np.asarray(one.hessian(name)),
+                                   rtol=1e-5, atol=1e-4, err_msg=name)
+    assert many.token_count("attn.wq") == one.token_count("attn.wq")
+
+
+def test_streaming_compression_matches_single_batch(small_model):
+    """compress_model under a chunked CalibrationSpec reproduces the
+    single-batch result on identical data (error propagation runs
+    per-chunk through the same compressed prefix)."""
+    cfg, params = small_model
+    cal = calibration_batch(cfg.vocab, n_seq=4, seq_len=32)
+    one, _ = compress_model(cfg, params, cal, plan="*=slab@iters=2")
+    many, _ = compress_model(cfg, params,
+                             CalibrationSpec(cal, batch_size=2),
+                             plan="*=slab@iters=2")
+    for (pa, la), (pb, lb) in zip(
+            jax.tree_util.tree_flatten_with_path(one["layers"])[0],
+            jax.tree_util.tree_flatten_with_path(many["layers"])[0]):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   rtol=1e-4, atol=1e-5,
+                                   err_msg=jax.tree_util.keystr(pa))
+
+
+# ------------------------------------------------------------------
+# Measured compression ratio
+# ------------------------------------------------------------------
+
+def test_stats_record_measured_cr(small_model):
+    cfg, params = small_model
+    cal = calibration_batch(cfg.vocab, n_seq=2, seq_len=16)
+    new, stats, decs = compress_model(
+        cfg, params, cal, plan="*=slab@iters=2",
+        keep_decompositions=True)
+    for s in stats:
+        want = compression_ratio(decs[(s.layer, s.name)])
+        assert abs(s.cr - want) < 1e-9, (s.name, s.cr, want)
+    # pruning-only methods report the achieved zero fraction
+    new2, stats2 = compress_model(cfg, params, cal,
+                                  plan="attn.wq=wanda@cr=0.3; *=skip")
+    for s in stats2:
+        w = np.asarray(new2["layers"]["attn"]["wq"][s.layer])
+        assert abs(s.cr - float(np.mean(w == 0))) < 1e-9
+
+
+def test_method_sugar_equals_catch_all_plan(small_model):
+    """compress_model(method=...) is exactly plan_for_method(...)."""
+    cfg, params = small_model
+    cal = calibration_batch(cfg.vocab, n_seq=2, seq_len=16)
+    scfg = SLaBConfig(cr=0.5, iters=1)
+    a, _ = compress_model(cfg, params, cal, method="wanda", scfg=scfg)
+    b, _ = compress_model(cfg, params, cal,
+                          plan=plan_for_method("wanda", scfg))
+    for la, lb in zip(jax.tree.leaves(a["layers"]),
+                      jax.tree.leaves(b["layers"])):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_plan_rule_dataclass_roundtrip():
+    rule = PlanRule("moe.shared.*", "slab", layers="0-3",
+                    options={"cr": 0.4})
+    plan = CompressionPlan.parse([rule])
+    r = plan.resolve(2, "moe.shared.w_up")
+    assert r.method == "slab" and r.scfg.cr == 0.4
+    assert plan.resolve(4, "moe.shared.w_up") is None
