@@ -1,0 +1,131 @@
+"""Packed vs dense serving: tokens/s and bytes-per-linear, per variant.
+
+Starts the perf trajectory for the heterogeneous packed-serving path:
+a mixed-method plan (N:M SparseGPT attention, rank-4 HASSLE-free gate,
+SLaB elsewhere) is compressed once, then decode throughput is measured
+for the dense-equivalent weights and for the fully packed model, and
+the on-HBM storage cost of every packed variant is compared against its
+dense footprint.
+
+CPU caveat: the Pallas kernels run in interpret mode here, so absolute
+packed tokens/s is NOT meaningful off-TPU — the bytes-per-linear
+numbers are the hardware-independent signal (they bound the roofline
+win at decode), and the tokens/s columns become meaningful on a real
+TPU. Emits experiments/benchmarks/BENCH_packed_serve.json.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core.packed_model import PackedLinear, PackedStack, pack_plan_decs
+from repro.core.pipeline import _get, compress_model, linear_paths
+from repro.core.plan import CompressionPlan
+from repro.core.slab import SLaBConfig
+from repro.data import calibration_batch
+from repro.models import lm
+from repro.models.common import positions_for
+
+from benchmarks.common import emit
+
+ARCH = "stablelm_12b"
+PLAN = ("attn.*=sparsegpt@pattern=2:4; mlp.w_gate=hassle@rank=4; "
+        "*=slab")
+BATCH, STEPS = 4, 8
+
+
+def _decode_toks_per_s(cfg, params, batch=BATCH, steps=STEPS) -> float:
+    cache = lm.init_cache(cfg, batch, steps + 1)
+    dec = jax.jit(lambda c, t, p: lm.decode_step(cfg, params, c, t, p))
+    tok = jnp.zeros((batch, 1), jnp.int32)
+    logits, cache = dec(cache, tok, positions_for(cfg, batch, 1))
+    jax.block_until_ready(logits)                      # compile outside
+    t0 = time.monotonic()
+    for t in range(1, steps + 1):
+        logits, cache = dec(cache, tok,
+                            positions_for(cfg, batch, 1, offset=t))
+    jax.block_until_ready(logits)
+    return batch * steps / (time.monotonic() - t0)
+
+
+def _packed_leaf_rows(leaf, dense_leaf):
+    """[(variant, packed_bytes_per_linear, n_linears)] for one path."""
+    n_l = dense_leaf.shape[0]
+    per_dense = dense_leaf.nbytes / n_l
+    if isinstance(leaf, PackedLinear):
+        per = sum(a.nbytes for a in jax.tree.leaves(leaf)) / n_l
+        return [(leaf.variant, per, per_dense, n_l)]
+    if isinstance(leaf, PackedStack):
+        rows = []
+        for grp, mem in zip(leaf.groups, leaf.members):
+            per = sum(a.nbytes for a in jax.tree.leaves(grp)) / len(mem)
+            rows.append((grp.variant, per, per_dense, len(mem)))
+        return rows
+    return []
+
+
+def run():
+    cfg = configs.get(ARCH, smoke=True).with_(dtype=jnp.float32)
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    cal = calibration_batch(cfg.vocab, n_seq=4, seq_len=32)
+    plan = CompressionPlan.parse(PLAN, base=SLaBConfig(cr=0.5, iters=4))
+    dense_c, stats, decs = compress_model(cfg, params, cal, plan=plan,
+                                          keep_decompositions=True)
+    packed, rep = pack_plan_decs(dense_c, decs, cfg.n_layers, plan)
+
+    tok_dense = _decode_toks_per_s(cfg, dense_c)
+    tok_packed = _decode_toks_per_s(cfg, packed)
+
+    variants = {}
+    for path in linear_paths(cfg):
+        leaf = _get(packed["layers"], path)
+        dense_leaf = _get(dense_c["layers"], path)
+        for var, per, per_dense, n in _packed_leaf_rows(leaf, dense_leaf):
+            agg = variants.setdefault(
+                var, {"n_linears": 0, "packed_bytes": 0.0,
+                      "dense_bytes": 0.0})
+            agg["n_linears"] += n
+            agg["packed_bytes"] += per * n
+            agg["dense_bytes"] += per_dense * n
+    for var, agg in variants.items():
+        agg["bytes_per_linear_packed"] = agg.pop("packed_bytes") / agg["n_linears"]
+        agg["bytes_per_linear_dense"] = agg.pop("dense_bytes") / agg["n_linears"]
+        agg["bytes_ratio"] = (agg["bytes_per_linear_packed"]
+                              / agg["bytes_per_linear_dense"])
+
+    rows = {
+        "arch": cfg.name,
+        "plan": PLAN,
+        "backend": jax.default_backend(),
+        "interpret_mode": jax.default_backend() == "cpu",
+        "n_packed": rep.n_packed,
+        "dense_fallback": len(rep.fallback),
+        "by_variant": rep.by_variant,
+        "tokens_per_s": {"dense": tok_dense, "packed": tok_packed},
+        "variants": variants,
+    }
+    emit("BENCH_packed_serve", rows)
+    return rows
+
+
+def check(rows) -> bool:
+    """Every linear packs, and every N:M / low-rank variant beats its
+    dense bytes (the roofline-relevant invariant)."""
+    ok = rows["dense_fallback"] == 0 and rows["n_packed"] > 0
+    for var, agg in rows["variants"].items():
+        if var.endswith("-nm") or var in ("binlr", "lowrank"):
+            ok = ok and agg["bytes_ratio"] < 1.0
+    return ok
+
+
+if __name__ == "__main__":
+    rows = run()
+    print({k: v for k, v in rows.items() if k != "variants"})
+    for var, agg in sorted(rows["variants"].items()):
+        print(f"  {var}: {agg['bytes_per_linear_packed']/1e3:.1f} kB/linear "
+              f"vs dense {agg['bytes_per_linear_dense']/1e3:.1f} kB "
+              f"({agg['bytes_ratio']:.2f}x)")
+    print("packed_serve check:", "PASS" if check(rows) else "FAIL")

@@ -13,12 +13,14 @@ import subprocess
 import sys
 import time
 
-JOBS = ["table1", "table2", "table3", "fig1", "fig3", "kernels"]
+JOBS = ["table1", "table2", "table3", "fig1", "fig3", "kernels",
+        "packed_serve"]
 
 
 def run_inline(name: str, fast: bool) -> bool:
     from benchmarks import (bench_fig1, bench_fig3, bench_kernels,
-                            bench_table1, bench_table2, bench_table3)
+                            bench_packed_serve, bench_table1,
+                            bench_table2, bench_table3)
     jobs = {
         "table1": lambda: bench_table1.check(bench_table1.run(fast)),
         "table2": lambda: bench_table2.check(bench_table2.run(fast)),
@@ -26,6 +28,8 @@ def run_inline(name: str, fast: bool) -> bool:
         "fig1": lambda: bench_fig1.check(bench_fig1.run()),
         "fig3": lambda: bench_fig3.check(bench_fig3.run()),
         "kernels": lambda: (bench_kernels.run(), True)[1],
+        "packed_serve": lambda: bench_packed_serve.check(
+            bench_packed_serve.run()),
     }
     return bool(jobs[name]())
 

@@ -9,6 +9,10 @@
 #   scripts/tier1.sh pipeline   # compression-policy loop: compressor
 #                               # registry, plans, layer-wise pipeline,
 #                               # taps (mixed-method e2e stays @slow)
+#   scripts/tier1.sh packed     # packed-serving loop: variant-tagged
+#                               # formats, per-variant kernels,
+#                               # heterogeneous stacks, e2e packed
+#                               # forward/decode
 #   scripts/tier1.sh <pytest args...>   # anything else passes through
 #
 # The full suite (the tier-1 gate, incl. @slow) stays:
@@ -29,5 +33,12 @@ if [ "${1:-}" = "pipeline" ]; then
     shift
     exec python -m pytest -q -m "not slow" \
         tests/test_plan.py tests/test_pipeline.py tests/test_taps.py "$@"
+fi
+
+if [ "${1:-}" = "packed" ]; then
+    shift
+    exec python -m pytest -q -m "not slow" \
+        tests/test_kernels.py tests/test_packed_serving.py \
+        tests/test_hetero_packing.py "$@"
 fi
 exec python -m pytest -q -m "not slow" "$@"

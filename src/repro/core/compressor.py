@@ -24,10 +24,13 @@ Registering a new method needs zero edits to ``core.pipeline``::
 then select it from any plan rule: ``"mlp.*=mymethod@cr=0.6"``.
 
 Built-ins: ``slab`` (Algorithm 1), the paper's baselines ``wanda`` /
-``magnitude`` / ``sparsegpt``, and ``hassle`` — a HASSLE-free-style
+``magnitude`` / ``sparsegpt``, ``hassle`` — a HASSLE-free-style
 alternating sparse + low-rank decomposition (Makni et al. 2025) driven
-by the per-linear X^T X the taps already collect, shipped as proof the
-extension point carries a genuinely new solver.
+by the per-linear X^T X the taps already collect — and ``sola``, a
+SoLA-style soft activation-aware pruner (score-space soft-threshold
+instead of hard masking). Every built-in returns a decomposition the
+packed-serving path can classify (core.packed_model.variant_of), so
+mixed plans serve fully on the fused kernels.
 """
 from __future__ import annotations
 
@@ -61,8 +64,10 @@ class CompressedLinear(NamedTuple):
     """Result of compressing one (D_out, D_in) weight matrix.
 
     dense : (D_out, D_in) fp32 dense equivalent (what XLA serves).
-    dec   : structured decomposition for the packed kernel path, or
-            None for pruning-only methods.
+    dec   : structured decomposition for the packed kernel path —
+            pruning-only methods return a sparse-only dec (empty
+            binary/low-rank terms) so their layers still pack; None
+            means the linear can only serve dense.
     cr    : measured compression ratio (Eq. 9 for decompositions, zero
             fraction for pure pruning); None if not computable.
     """
@@ -132,6 +137,19 @@ def _pruned_cr(dense: Array) -> float:
     return float(jnp.mean(dense == 0))
 
 
+def _sparse_only_dec(w_s: Array) -> SLaBDecomposition:
+    """Sparse-only decomposition (no binary / low-rank terms): what a
+    pruning method hands the packed-serving path so its layers ride the
+    N:M kernel (or the dense-masked format tag) instead of falling back
+    to dense XLA."""
+    d_out, d_in = w_s.shape
+    return SLaBDecomposition(
+        w_s=w_s,
+        u=jnp.zeros((d_out, 0), jnp.float32),
+        v=jnp.zeros((d_in, 0), jnp.float32),
+        w_b=jnp.zeros((0, 0), jnp.int8))
+
+
 @register("slab")
 class SLaBCompressor(Compressor):
     """Paper Algorithm 1: W ≈ W_S + W_L ⊙ W_B (incl. ablation modes)."""
@@ -156,7 +174,7 @@ class WandaCompressor(Compressor):
         out = base_lib.wanda_prune(w, an, 1.0 - self.scfg.cr,
                                    group=self.scfg.group,
                                    pattern=self.scfg.pattern)
-        return CompressedLinear(out, None, _pruned_cr(out))
+        return CompressedLinear(out, _sparse_only_dec(out), _pruned_cr(out))
 
 
 @register("magnitude")
@@ -169,7 +187,7 @@ class MagnitudeCompressor(Compressor):
         out = base_lib.magnitude_prune(w, 1.0 - self.scfg.cr,
                                        group=self.scfg.group,
                                        pattern=self.scfg.pattern)
-        return CompressedLinear(out, None, _pruned_cr(out))
+        return CompressedLinear(out, _sparse_only_dec(out), _pruned_cr(out))
 
 
 @register("sparsegpt")
@@ -184,7 +202,7 @@ class SparseGPTCompressor(Compressor):
         out = base_lib.sparsegpt_prune(w, stats.hessian,
                                        1.0 - self.scfg.cr,
                                        pattern=self.scfg.pattern)
-        return CompressedLinear(out, None, _pruned_cr(out))
+        return CompressedLinear(out, _sparse_only_dec(out), _pruned_cr(out))
 
 
 @register("hassle")
@@ -261,3 +279,54 @@ class HassleFreeCompressor(Compressor):
         dense = jnp.asarray(w_s + low, jnp.float32)
         return CompressedLinear(dense, dec,
                                 compression_ratio(dec, self.scfg.bits))
+
+
+@register("sola")
+class SoLACompressor(Compressor):
+    """SoLA-style soft activation-aware sparsity from the tapped norms.
+
+    The Wanda score s = |W| · ‖X‖₂ picks the kept positions; instead of
+    copying survivors verbatim (hard masking), they pass through the
+    score-space soft-threshold — the proximal operator of the
+    activation-weighted L1 penalty λ‖diag(‖X‖₂) ∘ W‖₁:
+
+        w_ij ← sign(w_ij) · (|w_ij| − softness · λ / ‖X_j‖₂)₊
+
+    with λ the smallest *kept* score, so the kept/zeroed transition is
+    continuous in the score instead of a cliff. ``softness=0`` reduces
+    exactly to ``wanda``; ``softness`` must stay < 1 because the full
+    prox step would zero the boundary survivor whose score equals λ
+    exactly — with strict shrinkage every kept score ≥ λ (group top-k
+    keeps the best of each comparison group) leaves a non-zero residual,
+    so the support equals Wanda's, the measured CR equals the requested
+    zero fraction, and the result packs as a sparse-only variant like
+    the other pruners.
+    """
+
+    needs = frozenset({"norms"})
+
+    def __init__(self, scfg: SLaBConfig = SLaBConfig(),
+                 softness: float = 0.5):
+        super().__init__(scfg)
+        if not 0.0 <= softness < 1.0:
+            raise ValueError(f"softness must be in [0, 1), got {softness}")
+        self.softness = float(softness)
+
+    def compress(self, w: Array, stats: LinearStats) -> CompressedLinear:
+        from repro.core import sparsity as sparsity_lib
+        d_in = w.shape[1]
+        an = (stats.norms if stats.norms is not None
+              else jnp.ones((d_in,), jnp.float32)).astype(jnp.float32)
+        an = jnp.maximum(an, 1e-12)
+        s = jnp.abs(w.astype(jnp.float32)) * an[None, :]
+        mask = sparsity_lib.prune_mask(s, 1.0 - self.scfg.cr,
+                                       group=self.scfg.group,
+                                       pattern=self.scfg.pattern)
+        lam = jnp.min(jnp.where(mask, s, jnp.inf))   # smallest kept score
+        shrink = self.softness * lam / an[None, :]
+        out = jnp.where(
+            mask,
+            jnp.sign(w) * jnp.maximum(jnp.abs(w.astype(jnp.float32))
+                                      - shrink, 0.0),
+            0.0)
+        return CompressedLinear(out, _sparse_only_dec(out), _pruned_cr(out))

@@ -1,10 +1,39 @@
-"""Packed-weight model serving: every compressed linear lives in the
-SLaB on-HBM format (N:M values+indices or dense-masked W_S, bit-packed
-W_B, rank-1 u/v) and forwards through the fused Pallas kernels.
+"""Packed-weight model serving: every compressed linear lives in an
+on-HBM packed format (N:M values+indices or dense-masked W_S, bit-packed
+W_B, rank-r u/v factors) and forwards through the fused Pallas kernels.
 
-`PackedLinear` is a pure-array NamedTuple (all static metadata — the
-N:M pattern, D_in — is derivable from leaf shapes), so stacks of packed
-layers slice cleanly through `lax.scan` like any other parameter.
+``PackedLinear`` is a **variant-tagged** registered pytree: the arrays
+that exist depend on which decomposition terms the compressor produced,
+and a static ``variant`` tag picks the kernel at dispatch time:
+
+  variant          terms                       kernel
+  ---------------  --------------------------  ---------------------------
+  slab-nm          N:M W_S + W_B + rank-r UV   ops.slab_nm_matmul
+  slab-dense       dense W_S + W_B + rank-r    ops.slab_matmul
+  binlr            W_B + rank-r UV (no W_S)    ops.binlr
+  lowrank-nm       N:M W_S + rank-r UV         ops.slab_nm_lr_matmul
+  lowrank-dense    dense W_S + rank-r UV       ops.slab_lr_matmul
+  lowrank          rank-r UV only              (x @ V) @ Uᵀ (XLA; already
+                                               minimal bytes)
+  sparse-nm        N:M W_S only                ops.nm_matmul
+  sparse-dense     dense-masked W_S only       x @ W_Sᵀ (XLA; dense-masked
+                                               bytes equal dense — the
+                                               format tag still marks the
+                                               linear as served-in-format)
+
+Static metadata (variant, m_pat, d_in, d_out, rank) rides in the pytree
+aux data, so stacks of packed layers slice cleanly through ``lax.scan``
+and ``jax.tree.map`` like any other parameter — and tree operations
+refuse to mix variants (aux mismatch), which is exactly the stacking
+invariant the packer enforces.
+
+Heterogeneous paths — different variants/patterns/ranks across layers of
+one path, or partial layer coverage — pack into a ``PackedStack``:
+segmented per-variant stacks keyed by (variant, pattern, rank) plus an
+optional stacked dense remainder. A PackedStack cannot slice through one
+``lax.scan`` (leaf shapes differ per layer), so ``models.lm`` unrolls
+the layer loop when one is present; fully-covered single-variant paths
+keep the scanned fast path.
 
 CPU note: Mosaic only compiles on TPU; on CPU the kernels run in
 interpret mode (numerics-exact, slow) — the packed path is exercised by
@@ -12,7 +41,8 @@ tests/examples at smoke scale and is the TPU serving configuration.
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional, Tuple
+import dataclasses
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,50 +53,214 @@ from repro.models.common import tap_record
 
 Array = jax.Array
 
+PACKED_VARIANTS = ("slab-nm", "slab-dense", "binlr", "lowrank-nm",
+                   "lowrank-dense", "lowrank", "sparse-nm", "sparse-dense")
 
-class PackedLinear(NamedTuple):
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PackedLinear:
     """One compressed linear, model-orientation (computes x @ Wᵀ for the
     paper's (D_out, D_in) W — i.e. a drop-in for x @ w, w (D_in, D_out)).
 
-    N:M mode: sparse_vals/idx (D_out, D_in/m, n); unstructured mode:
-    sparse_vals is the dense-masked W_S (D_out, D_in) and sparse_idx is
-    None (the documented TPU fallback — lane gathers are VPU-hostile).
+    Array fields are pytree children (absent terms are None); the
+    variant tag and shape metadata are static aux data, preserved by
+    stacking/slicing and checked for equality by tree operations.
+
+    sparse_vals : (D_out, D_in) dense-masked W_S, or (D_out, D_in/m, n)
+                  N:M values, or None.
+    sparse_idx  : (D_out, D_in/m, n) int8 N:M positions, or None.
+    b_packed    : (D_out, D_in/32) uint32 sign bits, or None.
+    u, v        : (D_out, r) / (D_in, r) low-rank factors, or None.
     """
-    sparse_vals: Array
+
+    sparse_vals: Optional[Array]
     sparse_idx: Optional[Array]
-    b_packed: Array          # (D_out, D_in/32) uint32
-    u: Array                 # (D_out,)
-    v: Array                 # (D_in,)
+    b_packed: Optional[Array]
+    u: Optional[Array]
+    v: Optional[Array]
+    variant: str = "slab-dense"
+    m_pat: int = 0            # N:M group size m (0 = not N:M)
+    d_in: int = 0
+    d_out: int = 0
+    rank: int = 0
+
+    def tree_flatten(self):
+        return ((self.sparse_vals, self.sparse_idx, self.b_packed,
+                 self.u, self.v),
+                (self.variant, self.m_pat, self.d_in, self.d_out,
+                 self.rank))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PackedStack:
+    """Segmented packed stacks for one linear path across the layer dim.
+
+    ``groups[g]`` is a PackedLinear stacked over ``members[g]`` (layer
+    ids, ascending); ``dense`` is the original stacked weight restricted
+    to ``dense_members`` — layers the plan left dense (partial
+    coverage). Membership is static aux data so ``at_layer`` resolves at
+    trace time; the model unrolls its layer loop over one of these.
+    """
+
+    groups: Tuple[PackedLinear, ...]
+    dense: Optional[Array]
+    members: Tuple[Tuple[int, ...], ...]
+    dense_members: Tuple[int, ...]
+    n_layers: int
+
+    def tree_flatten(self):
+        return ((self.groups, self.dense),
+                (self.members, self.dense_members, self.n_layers))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    def at_layer(self, l: int):
+        """The layer-``l`` leaf: a sliced PackedLinear or a dense 2-D
+        weight (in model (D_in, D_out) orientation)."""
+        for grp, mem in zip(self.groups, self.members):
+            if l in mem:
+                i = mem.index(l)
+                return jax.tree.map(lambda a: a[i], grp)
+        if l in self.dense_members:
+            return self.dense[self.dense_members.index(l)]
+        raise KeyError(f"layer {l} not held by this PackedStack")
+
+    def variant_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for grp, mem in zip(self.groups, self.members):
+            out[grp.variant] = out.get(grp.variant, 0) + len(mem)
+        return out
+
+
+def _is_packed_leaf(x) -> bool:
+    return isinstance(x, (PackedLinear, PackedStack))
+
+
+def has_hetero(tree) -> bool:
+    """True if any leaf is a PackedStack (forces the unrolled layer
+    loop; homogeneous stacked PackedLinears scan fine)."""
+    return any(isinstance(l, PackedStack)
+               for l in jax.tree.leaves(tree, is_leaf=_is_packed_leaf))
+
+
+def layer_slice(tree, l: int):
+    """Slice a stacked layers tree at layer ``l``, resolving PackedStack
+    leaves to their layer-``l`` representation."""
+    def f(x):
+        if isinstance(x, PackedStack):
+            return x.at_layer(l)
+        if isinstance(x, PackedLinear):
+            return jax.tree.map(lambda a: a[l], x)
+        return x[l]
+    return jax.tree.map(f, tree, is_leaf=_is_packed_leaf)
+
+
+# ------------------------------------------------------------------
+# Variant classification + per-linear packing
+# ------------------------------------------------------------------
+
+def _dec_rank(dec: SLaBDecomposition) -> int:
+    if dec.u is None or not dec.u.size:
+        return 0
+    return dec.u.shape[1] if dec.u.ndim == 2 else 1
+
+
+def variant_of(dec: SLaBDecomposition,
+               pattern: Optional[str]) -> Optional[str]:
+    """Classify one decomposition into its packed-serving variant (None
+    = not representable; stays dense). The binary term only counts when
+    a low-rank factor exists — W_L ⊙ W_B with empty W_L is identically
+    zero (see core.slab.low_rank_times_binary), so a lone W_B carries no
+    signal and the sparse part serves alone."""
+    if dec.w_s is None or dec.w_s.ndim != 2:
+        return None
+    rank = _dec_rank(dec)
+    has_b = (dec.w_b is not None and dec.w_b.size > 0 and rank > 0)
+    if not has_b and rank == 0:
+        # pruning-only dec: the sparse part is the only term, so no
+        # device sync is needed to disambiguate (an all-zero W_S would
+        # just serve zeros — same as its dense equivalent)
+        return f"sparse-{'nm' if pattern else 'dense'}"
+    has_s = bool(dec.w_s.size) and bool(jnp.any(dec.w_s != 0))
+    kind = ("nm" if pattern else "dense") if has_s else None
+    if has_b:
+        return f"slab-{kind}" if kind else "binlr"
+    if rank > 0:
+        return f"lowrank-{kind}" if kind else "lowrank"
+    return f"sparse-{kind}" if kind else None
 
 
 def pack_linear(dec: SLaBDecomposition, pattern: Optional[str],
-                dtype=jnp.float32) -> PackedLinear:
+                dtype=jnp.float32,
+                variant: Optional[str] = None) -> PackedLinear:
+    """Pack one decomposition into its variant's storage format."""
     d_out, d_in = dec.w_s.shape
-    u = (dec.u[:, 0] if dec.u.ndim == 2 else dec.u).astype(dtype)
-    v = (dec.v[:, 0] if dec.v.ndim == 2 else dec.v).astype(dtype)
-    bp = pack_sign_bits(dec.w_b)
-    if pattern is not None:
-        n, m = map(int, pattern.split(":"))
-        nm = pack_nm(dec.w_s.astype(dtype), n, m)
-        return PackedLinear(nm.values, nm.indices, bp, u, v)
-    return PackedLinear(dec.w_s.astype(dtype), None, bp, u, v)
+    variant = variant_of(dec, pattern) if variant is None else variant
+    if variant is None:
+        raise ValueError("decomposition has no packable terms")
+    rank = _dec_rank(dec)
+    u = v = bp = vals = idx = None
+    m_pat = 0
+    if rank:
+        u = (dec.u if dec.u.ndim == 2 else dec.u[:, None]).astype(dtype)
+        v = (dec.v if dec.v.ndim == 2 else dec.v[:, None]).astype(dtype)
+    if variant.startswith("slab-") or variant == "binlr":
+        bp = pack_sign_bits(dec.w_b)
+    if variant.endswith("-nm"):
+        n, m_pat = map(int, pattern.split(":"))
+        # strict: a rule pattern that disagrees with the compressor's
+        # actual output must fail loudly, not drop values
+        nm = pack_nm(dec.w_s.astype(dtype), n, m_pat, strict=True)
+        vals, idx = nm.values, nm.indices
+    elif variant.endswith("-dense") or variant.startswith("sparse"):
+        vals = dec.w_s.astype(dtype)
+    return PackedLinear(vals, idx, bp, u, v, variant=variant, m_pat=m_pat,
+                        d_in=d_in, d_out=d_out, rank=rank)
 
 
 def packed_matmul(x: Array, w: PackedLinear,
                   interpret: Optional[bool] = None) -> Array:
-    """x (..., D_in) @ Wᵀ through the fused kernel."""
+    """x (..., D_in) @ Wᵀ through the variant's fused kernel."""
     from repro.kernels import ops
-    d_in = w.v.shape[-1]
-    if w.sparse_idx is not None:
-        m_pat = d_in // w.sparse_vals.shape[-2]
-        return ops.slab_nm_matmul(
-            x, w.sparse_vals, w.sparse_idx, m_pat, w.b_packed, w.u, w.v,
-            bm=128, bn=128, bk=min(512, d_in), interpret=interpret
-        ).astype(x.dtype)
-    return ops.slab_matmul(
-        x, w.sparse_vals.astype(x.dtype), w.b_packed, w.u, w.v,
-        bm=128, bn=128, bk=min(512, d_in), interpret=interpret
-    ).astype(x.dtype)
+    bk = min(512, w.d_in)
+    kw = dict(bm=128, bn=128, bk=bk, interpret=interpret)
+    var = w.variant
+    if var == "slab-nm":
+        y = ops.slab_nm_matmul(x, w.sparse_vals, w.sparse_idx, w.m_pat,
+                               w.b_packed, w.u, w.v, **kw)
+    elif var == "slab-dense":
+        y = ops.slab_matmul(x, w.sparse_vals.astype(x.dtype), w.b_packed,
+                            w.u, w.v, **kw)
+    elif var == "binlr":
+        y = ops.binlr(x, w.b_packed, w.u, w.v, **kw)
+    elif var == "lowrank-nm":
+        y = ops.slab_nm_lr_matmul(x, w.sparse_vals, w.sparse_idx, w.m_pat,
+                                  w.u, w.v, **kw)
+    elif var == "lowrank-dense":
+        y = ops.slab_lr_matmul(x, w.sparse_vals.astype(x.dtype),
+                               w.u, w.v, **kw)
+    elif var == "lowrank":
+        # two skinny XLA matmuls: r(D_in + D_out) weights per token —
+        # already the minimal-byte form, nothing left to fuse
+        y = (x.astype(jnp.float32) @ w.v.astype(jnp.float32)) \
+            @ w.u.astype(jnp.float32).T
+    elif var == "sparse-nm":
+        y = ops.nm_matmul(x, w.sparse_vals, w.sparse_idx, w.m_pat, **kw)
+    elif var == "sparse-dense":
+        # dense-masked bytes equal dense bytes: a plain dot IS the
+        # optimal serve; the tag records the linear as served-in-format
+        y = x @ w.sparse_vals.astype(x.dtype).T
+    else:
+        raise ValueError(f"unknown packed variant {var!r}")
+    return y.astype(x.dtype)
 
 
 def linear(x: Array, w, tap: Optional[str] = None) -> Array:
@@ -82,54 +276,129 @@ def linear(x: Array, w, tap: Optional[str] = None) -> Array:
     return x @ w
 
 
+# ------------------------------------------------------------------
+# Whole-model packing
+# ------------------------------------------------------------------
+
+class PackReport(NamedTuple):
+    """What pack_plan_decs did: per-variant packed-linear counts, the
+    packed paths, and the (layer, path) decs left on the dense path."""
+    n_packed: int
+    by_variant: Dict[str, int]
+    paths: List[str]
+    fallback: List[Tuple[int, str]]
+
+
+def _stack_group(pls: List[PackedLinear]) -> PackedLinear:
+    if len(pls) == 1:
+        return jax.tree.map(lambda a: a[None], pls[0])
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *pls)
+
+
 def pack_plan_decs(params: dict,
                    decs: Dict[Tuple[int, str], SLaBDecomposition],
-                   n_layers: int, plan) -> Tuple[dict, int, list]:
-    """Pack the kernel-servable subset of a (possibly mixed-method)
-    plan's decompositions: rank-1 decs with a binary term, full layer
-    coverage per path, and one sparse format per path — the pattern
-    each dec's resolved plan rule actually compressed with. Everything
-    else stays on the dense XLA path. Returns
-    (params, n_linears_packed, packed_paths)."""
-    servable = {k: v for k, v in decs.items()
-                if v.w_b is not None and v.w_b.size       # has W_B
-                and v.u is not None and v.u.size          # has W_L
-                and (v.u.ndim == 1 or v.u.shape[1] == 1)}  # rank 1
-    pat_of = {}
-    for (l, name) in servable:
+                   n_layers: int, plan,
+                   dtype=jnp.float32,
+                   variants: Optional[Dict[Tuple[int, str], str]] = None
+                   ) -> Tuple[dict, PackReport]:
+    """Pack EVERY servable decomposition of a (possibly mixed-method)
+    plan — mixed variants, mixed N:M patterns, mixed ranks, and partial
+    layer coverage per path all pack:
+
+      * layers of one path with the same (variant, pattern, rank) stack
+        into one scan-sliceable group;
+      * a path whose single group covers all layers stays a plain
+        stacked PackedLinear (the lax.scan fast path);
+      * anything else becomes a PackedStack of segmented groups plus
+        the dense remainder, and the model unrolls its layer loop.
+
+    Patterns come from each dec's own resolved plan rule (per (layer,
+    path) — not layer 0's), so paths whose early layers are skipped or
+    use different rules pack fine. ``variants`` optionally supplies the
+    per-(layer, path) classification the pipeline already computed
+    (``CompressStats.variant``; "" = unservable) so the per-linear
+    ``variant_of`` device sync isn't paid twice. Returns
+    (params, PackReport)."""
+    from repro.core.pipeline import _get, _set
+
+    by_path: Dict[str, Dict[Tuple[str, Optional[str], int],
+                            List[Tuple[int, SLaBDecomposition,
+                                       Optional[str]]]]] = {}
+    fallback: List[Tuple[int, str]] = []
+    for (l, name) in sorted(decs, key=lambda k: (k[1], k[0])):
+        dec = decs[(l, name)]
         r = plan.resolve(l, name)
-        pat_of[(l, name)] = r.scfg.pattern if r is not None else None
-    coverage: Dict[str, int] = {}
-    for (_, name) in servable:
-        coverage[name] = coverage.get(name, 0) + 1
-    paths = {name for name, n in coverage.items()
-             if n == n_layers
-             and len({pat_of[k] for k in servable if k[1] == name}) == 1}
+        pattern = r.scfg.pattern if r is not None else None
+        if variants is not None and (l, name) in variants:
+            var = variants[(l, name)] or None
+        else:
+            var = variant_of(dec, pattern)
+        if var is None:
+            fallback.append((l, name))
+            continue
+        key = (var, pattern if var.endswith("-nm") else None,
+               _dec_rank(dec))
+        by_path.setdefault(name, {}).setdefault(key, []).append(
+            (l, dec, pattern))
+
+    out = jax.tree.map(lambda a: a, params)     # shallow copy
     n_packed = 0
-    for pat in {pat_of[(0, name)] for name in paths}:
-        sub = {k: v for k, v in servable.items()
-               if k[1] in paths and pat_of[k] == pat}
-        params = pack_model(params, sub, n_layers, pattern=pat)
-        n_packed += len(sub)
-    return params, n_packed, sorted(paths)
+    by_variant: Dict[str, int] = {}
+    packed_paths: List[str] = []
+    for name, groups in sorted(by_path.items()):
+        old = _get(out["layers"], name)
+        if old is None:
+            fallback.extend((l, name) for vs in groups.values()
+                            for (l, _, _) in vs)
+            continue
+        stacked_groups: List[PackedLinear] = []
+        members: List[Tuple[int, ...]] = []
+        for key in sorted(groups, key=str):
+            var = key[0]
+            layers = groups[key]
+            pls = [pack_linear(dec, pat, dtype, variant=var)
+                   for (_, dec, pat) in layers]
+            stacked_groups.append(_stack_group(pls))
+            members.append(tuple(l for (l, _, _) in layers))
+            by_variant[var] = by_variant.get(var, 0) + len(layers)
+            n_packed += len(layers)
+        covered = {l for mem in members for l in mem}
+        missing = tuple(l for l in range(n_layers) if l not in covered)
+        if not missing and len(stacked_groups) == 1:
+            leaf = stacked_groups[0]            # lax.scan fast path
+        else:
+            dense = (jnp.stack([old[l] for l in missing])
+                     if missing else None)
+            leaf = PackedStack(tuple(stacked_groups), dense,
+                               tuple(members), missing, n_layers)
+        _set(out["layers"], name, leaf)
+        packed_paths.append(name)
+    return out, PackReport(n_packed, by_variant, packed_paths,
+                           sorted(fallback, key=lambda k: (k[1], k[0])))
 
 
 def pack_model(params: dict,
                decs: Dict[Tuple[int, str], SLaBDecomposition],
                n_layers: int,
-               pattern: Optional[str] = None) -> dict:
-    """Replace each decomposed linear in the stacked-params tree with a
-    stacked PackedLinear. ``decs`` comes from core.pipeline.compress_model
-    (keep_decompositions=True)."""
+               pattern: Optional[str] = None,
+               dtype=jnp.float32) -> dict:
+    """Single-pattern convenience packer: replace each fully-covered
+    decomposed path in the stacked-params tree with a stacked
+    PackedLinear (partial-coverage paths are skipped — use
+    ``pack_plan_decs`` for the general mixed/partial case). ``decs``
+    comes from core.pipeline.compress_model (keep_decompositions=True)."""
     from repro.core.pipeline import _get, _set
     out = jax.tree.map(lambda a: a, params)     # shallow copy
     paths = sorted({p for (_, p) in decs})
     for path in paths:
-        per_layer = [pack_linear(decs[(l, path)], pattern)
-                     for l in range(n_layers)
-                     if (l, path) in decs]
-        if len(per_layer) != n_layers:
+        if any((l, path) not in decs for l in range(n_layers)):
             continue                             # partial coverage: skip
-        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
-        _set(out["layers"], path, stacked)
+        variants = [variant_of(decs[(l, path)], pattern)
+                    for l in range(n_layers)]
+        if len(set(variants)) != 1 or variants[0] is None:
+            continue                             # mixed variants: skip
+        per_layer = [pack_linear(decs[(l, path)], pattern, dtype,
+                                 variant=variants[l])
+                     for l in range(n_layers)]
+        _set(out["layers"], path, _stack_group(per_layer))
     return out

@@ -54,14 +54,25 @@ class NMPacked(NamedTuple):
     d_in: int
 
 
-def pack_nm(w_s: Array, n: int, m: int) -> NMPacked:
+def pack_nm(w_s: Array, n: int, m: int, strict: bool = False) -> NMPacked:
     """Pack an N:M-sparse dense-masked matrix. Rows whose group has fewer
-    than n non-zeros are padded with (value 0, index = smallest unused)."""
+    than n non-zeros are padded with (value 0, index = smallest unused).
+
+    ``strict=True`` raises if any m-group holds MORE than n non-zeros
+    (the pack would silently drop values) — the guard the plan-driven
+    packer uses against a rule pattern that disagrees with what the
+    compressor actually produced."""
     d_out, d_in = w_s.shape
     if d_in % m:
         raise ValueError(f"D_in={d_in} not divisible by m={m}")
     g = w_s.reshape(d_out, d_in // m, m)
     nz = (g != 0)
+    if strict:
+        worst = int(jnp.max(jnp.sum(nz, axis=-1)))
+        if worst > n:
+            raise ValueError(
+                f"matrix is not {n}:{m} sparse (a group holds {worst} "
+                f"non-zeros; packing would drop values)")
     # Order: non-zeros first (stable by position), then zeros.
     order_key = jnp.where(nz, jnp.arange(m)[None, None, :], m + jnp.arange(m)[None, None, :])
     idx = jnp.argsort(order_key, axis=-1)[..., :n].astype(jnp.int8)

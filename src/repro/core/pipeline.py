@@ -68,6 +68,8 @@ class CompressStats:
     err_after: float    # ‖(W - Ŵ) diag(n)‖_F with the same tapped norms
     cr: float           # measured compression ratio (requested if unknown)
     method: str = ""
+    variant: str = ""   # packed-serving variant (core.packed_model
+                        # variant_of); "" = no kernel-servable form
 
 
 def _get(d: dict, path: str):
@@ -226,8 +228,12 @@ def _compress_leaf(layer: int, pth: str, w: Array, an: Optional[Array],
     w_new = cl.dense.T.astype(w.dtype)
     err_b, err_a = _weighted_errs(w, w_new, an)
     cr = cl.cr if cl.cr is not None else comp.scfg.cr
+    variant = ""
+    if cl.dec is not None:
+        from repro.core.packed_model import variant_of
+        variant = variant_of(cl.dec, r.scfg.pattern) or ""
     return w_new, cl.dec, CompressStats(layer, pth, err_b, err_a, cr,
-                                        r.method)
+                                        r.method, variant)
 
 
 def compress_model(cfg: ArchConfig, params: dict, calib,
@@ -248,7 +254,8 @@ def compress_model(cfg: ArchConfig, params: dict, calib,
     linears whose resolved compressor declares ``"hessian" in needs``
     (or when ``collect_hessian`` forces it). ``keep_decompositions``
     additionally returns {(layer, path): dec} for
-    core.packed_model.pack_model (kernel-served packed weights)."""
+    core.packed_model.pack_plan_decs (kernel-served packed weights;
+    pruning-only methods contribute sparse-only decompositions)."""
     plan = (plan_lib.CompressionPlan.parse(plan, base=scfg)
             if plan is not None else plan_lib.plan_for_method(method, scfg))
     spec = (calib if isinstance(calib, plan_lib.CalibrationSpec)

@@ -24,6 +24,39 @@ def unpack_bits_tile(packed: Array, dtype) -> Array:
     return pm1.reshape(bn, words * 32)
 
 
+def accum_binlr_terms(acc, x, b, u_ref, v_ref, rank: int) -> None:
+    """acc += Σ_r ((x ⊙ v_r) @ Bᵀ) ⊙ u_r for one (bm, bk) x tile and an
+    already-expanded ±1 tile b (bn, bk); u_ref/v_ref hold (rank, bn) /
+    (rank, bk) blocks. The Python loop over ranks unrolls at trace
+    time; every term reuses the one expanded B tile, so extra ranks
+    cost MXU passes, not HBM bytes. u_r is constant along K, so folding
+    it into each step equals scaling once at the end."""
+    for r in range(rank):
+        xv = x * v_ref[r:r + 1, :]
+        acc[...] += (jax.lax.dot_general(
+            xv, b.astype(xv.dtype), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+            * u_ref[r:r + 1, :].astype(jnp.float32))
+
+
+def accum_lowrank_proj(acc_p, x, v_ref) -> None:
+    """acc_p (bm, R) += x @ v_blockᵀ for one K step of the no-binary
+    low-rank kernels (v_ref holds an (R, bk) block); fp32 MXU pass."""
+    acc_p[...] += jax.lax.dot_general(
+        x.astype(jnp.float32), v_ref[...].astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def lowrank_epilogue(acc, acc_p, u_ref) -> Array:
+    """Final-K-step combine of the no-binary kernels: sparse accumulator
+    plus the rank-R projection applied through the (R, bn) U block."""
+    return acc[...] + jax.lax.dot_general(
+        acc_p[...], u_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
 def expand_nm_tile(vals: Array, idx: Array, m: int, dtype) -> Array:
     """(bn, g, n) values + (bn, g, n) int8 positions -> dense (bn, g*m).
 

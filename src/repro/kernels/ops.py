@@ -3,6 +3,11 @@
 Handles shape padding to block multiples, dtype plumbing, the
 interpret-mode switch (CPU validation; compiled Mosaic on real TPU), and
 a `slab_linear_kernel` convenience that consumes a `SLaBPacked` bundle.
+
+Low-rank factors are accepted in any of the storage conventions —
+``u``: (N,) rank-1 vector or (N, R) column factors; ``v``: (K,) or
+(K, R) — and canonicalized to the kernels' row-major rank stacks
+(R, N) / (R, K).
 """
 from __future__ import annotations
 
@@ -32,11 +37,19 @@ def _pad_rows(x: Array, mult: int) -> Array:
     return x
 
 
+def _rank_stack(u: Array, v: Array):
+    """(N,)/(N,R) u and (K,)/(K,R) v -> kernel-layout (R,N), (R,K)."""
+    u2 = u[None, :] if u.ndim == 1 else u.T
+    v2 = v[None, :] if v.ndim == 1 else v.T
+    return u2, v2
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def binlr(x: Array, b_packed: Array, u: Array, v: Array,
           bm: int = 256, bn: int = 256, bk: int = 512,
           interpret: Optional[bool] = None) -> Array:
     interpret = _on_cpu() if interpret is None else interpret
+    u, v = _rank_stack(u, v)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     m = x2.shape[0]
@@ -66,6 +79,7 @@ def slab_matmul(x: Array, w_s: Array, b_packed: Array, u: Array, v: Array,
                 bm: int = 256, bn: int = 256, bk: int = 512,
                 interpret: Optional[bool] = None) -> Array:
     interpret = _on_cpu() if interpret is None else interpret
+    u, v = _rank_stack(u, v)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     m = x2.shape[0]
@@ -82,12 +96,48 @@ def slab_nm_matmul(x: Array, vals: Array, idx: Array, m_pat: int,
                    bm: int = 256, bn: int = 256, bk: int = 512,
                    interpret: Optional[bool] = None) -> Array:
     interpret = _on_cpu() if interpret is None else interpret
+    u, v = _rank_stack(u, v)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     m = x2.shape[0]
     x2 = _pad_rows(x2, min(bm, max(m, 1)))
     y = slab_k.slab_nm_matmul(x2, vals, idx, m_pat, b_packed, u, v,
                               bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return y[:m].reshape(*lead, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def slab_lr_matmul(x: Array, w_s: Array, u: Array, v: Array,
+                   bm: int = 256, bn: int = 256, bk: int = 512,
+                   interpret: Optional[bool] = None) -> Array:
+    """Fused sparse + rank-r low-rank linear with NO binary term
+    (HASSLE-free-style decompositions): y = x @ W_Sᵀ + (x @ V) @ Uᵀ."""
+    interpret = _on_cpu() if interpret is None else interpret
+    u, v = _rank_stack(u, v)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    m = x2.shape[0]
+    x2 = _pad_rows(x2, min(bm, max(m, 1)))
+    y = slab_k.slab_lr_matmul(x2, w_s, u, v, bm=bm, bn=bn, bk=bk,
+                              interpret=interpret)
+    return y[:m].reshape(*lead, -1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m_pat", "bm", "bn", "bk", "interpret"))
+def slab_nm_lr_matmul(x: Array, vals: Array, idx: Array, m_pat: int,
+                      u: Array, v: Array,
+                      bm: int = 256, bn: int = 256, bk: int = 512,
+                      interpret: Optional[bool] = None) -> Array:
+    """N:M sparse + rank-r low-rank, no binary term."""
+    interpret = _on_cpu() if interpret is None else interpret
+    u, v = _rank_stack(u, v)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    m = x2.shape[0]
+    x2 = _pad_rows(x2, min(bm, max(m, 1)))
+    y = slab_k.slab_nm_lr_matmul(x2, vals, idx, m_pat, u, v,
+                                 bm=bm, bn=bn, bk=bk, interpret=interpret)
     return y[:m].reshape(*lead, -1)
 
 

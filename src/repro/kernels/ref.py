@@ -1,4 +1,8 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Low-rank factors follow the ops-wrapper convention: ``u`` is (N,) or
+(N, R) column factors, ``v`` is (K,) or (K, R).
+"""
 from __future__ import annotations
 
 import jax
@@ -9,12 +13,27 @@ from repro.core.packing import unpack_nm, unpack_sign_bits, NMPacked
 Array = jax.Array
 
 
+def _cols(u: Array) -> Array:
+    """(N,) -> (N, 1); (N, R) passes through."""
+    return u[:, None] if u.ndim == 1 else u
+
+
 def binlr_ref(x: Array, b_packed: Array, u: Array, v: Array) -> Array:
-    """y = ((x ⊙ v) @ Bᵀ) ⊙ u — rank-1 ⊙ binary term of a SLaB linear."""
+    """y = Σ_r ((x ⊙ v_r) @ Bᵀ) ⊙ u_r — binary ⊙ rank-r term."""
     k = x.shape[-1]
     b = unpack_sign_bits(b_packed, k, dtype=jnp.float32)
-    return (((x.astype(jnp.float32) * v.astype(jnp.float32)) @ b.T)
-            * u.astype(jnp.float32))
+    uu, vv = _cols(u).astype(jnp.float32), _cols(v).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    out = jnp.zeros((*x.shape[:-1], b.shape[0]), jnp.float32)
+    for r in range(uu.shape[1]):
+        out = out + ((xf * vv[:, r]) @ b.T) * uu[:, r]
+    return out
+
+
+def lowrank_ref(x: Array, u: Array, v: Array) -> Array:
+    """y = (x @ V) @ Uᵀ — rank-r low-rank term, no binary."""
+    uu, vv = _cols(u).astype(jnp.float32), _cols(v).astype(jnp.float32)
+    return (x.astype(jnp.float32) @ vv) @ uu.T
 
 
 def nm_matmul_ref(x: Array, vals: Array, idx: Array, m: int) -> Array:
@@ -28,7 +47,7 @@ def nm_matmul_ref(x: Array, vals: Array, idx: Array, m: int) -> Array:
 def slab_matmul_ref(x: Array, w_s: Array, b_packed: Array,
                     u: Array, v: Array) -> Array:
     """Fused SLaB linear, dense-masked sparse part:
-    y = x @ W_Sᵀ + ((x ⊙ v) @ Bᵀ) ⊙ u."""
+    y = x @ W_Sᵀ + Σ_r ((x ⊙ v_r) @ Bᵀ) ⊙ u_r."""
     y = x.astype(jnp.float32) @ w_s.astype(jnp.float32).T
     return y + binlr_ref(x, b_packed, u, v)
 
@@ -37,6 +56,18 @@ def slab_nm_matmul_ref(x: Array, vals: Array, idx: Array, m: int,
                        b_packed: Array, u: Array, v: Array) -> Array:
     """Fused SLaB linear with N:M packed sparse part."""
     return nm_matmul_ref(x, vals, idx, m) + binlr_ref(x, b_packed, u, v)
+
+
+def slab_lr_matmul_ref(x: Array, w_s: Array, u: Array, v: Array) -> Array:
+    """Sparse + rank-r low-rank, no binary: y = x @ W_Sᵀ + (x @ V) @ Uᵀ."""
+    y = x.astype(jnp.float32) @ w_s.astype(jnp.float32).T
+    return y + lowrank_ref(x, u, v)
+
+
+def slab_nm_lr_matmul_ref(x: Array, vals: Array, idx: Array, m: int,
+                          u: Array, v: Array) -> Array:
+    """N:M sparse + rank-r low-rank, no binary."""
+    return nm_matmul_ref(x, vals, idx, m) + lowrank_ref(x, u, v)
 
 
 def flash_decode_ref(q: Array, k: Array, v: Array, lengths: Array,

@@ -119,14 +119,20 @@ def main():
             eff_plan = (plan if plan is not None
                         else CompressionPlan.parse(f"*={args.compress}",
                                                    base=scfg))
-            params, n_packed, paths = pack_plan_decs(
-                params, out[2], cfg.n_layers, eff_plan)
-            if n_packed:
-                print(f"serving {n_packed} slab-form linears "
-                      f"({len(paths)} paths) through fused Pallas "
-                      f"kernels (SLaB packed on-HBM format)")
+            params, rep = pack_plan_decs(
+                params, out[2], cfg.n_layers, eff_plan,
+                variants={(s.layer, s.name): s.variant for s in stats})
+            if rep.n_packed:
+                variants = " ".join(
+                    f"{v}={c}" for v, c in sorted(rep.by_variant.items()))
+                print(f"packed serving: {rep.n_packed} linears on the "
+                      f"fused kernel path across {len(rep.paths)} paths "
+                      f"[{variants}]; dense fallback: {len(rep.fallback)}")
+                if rep.fallback:
+                    print("  dense-fallback linears:",
+                          ", ".join(f"L{l}/{p}" for l, p in rep.fallback))
             else:
-                print("--packed: plan produced no packable slab-form "
+                print("--packed: plan produced no packable "
                       "decompositions; serving dense-equivalent weights")
 
     corpus = SyntheticCorpus(cfg.vocab, seed=args.seed)

@@ -26,6 +26,7 @@ from typing import Any, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.packed_model import has_hetero, layer_slice
 from repro.models import attention as attn_lib
 from repro.models import mamba2 as mamba_lib
 from repro.models import mlp as mlp_lib
@@ -224,6 +225,21 @@ def forward(cfg: ArchConfig, params: dict, inputs: Array,
 
     stacked = params["layers"]
 
+    if has_hetero(stacked):
+        # Heterogeneous packed stacks (PackedStack leaves) hold
+        # different per-layer array shapes, so they cannot slice through
+        # one lax.scan — unroll the layer loop instead. Serving-only
+        # path (packed weights never train), so remat is irrelevant;
+        # compile cost is O(L) at smoke/serving depths.
+        aux = jnp.zeros((), jnp.float32)
+        for l in range(cfg.n_layers):
+            h = hint(h, DP, None, None)
+            h, a = _layer_fwd(cfg, params, layer_slice(stacked, l),
+                              jnp.asarray(l), h, positions)
+            aux = aux + a
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        return unembed(cfg, params, h), aux
+
     def body(carry, xs):
         h, aux = carry
         lp, idx = xs
@@ -352,6 +368,44 @@ def _shared_block_decode(cfg: ArchConfig, sp: dict, h: Array,
     return h + m, kv
 
 
+def _decode_step_unrolled(cfg: ArchConfig, params: dict, cache: LayerCache,
+                          h: Array, positions: Array
+                          ) -> Tuple[Array, LayerCache]:
+    """Decode body for heterogeneous packed stacks: a Python layer loop
+    in place of lax.scan (PackedStack leaves change shape per layer).
+    Per-layer caches are sliced from / restacked into the same stacked
+    buffers the scanned path uses, so the two paths are interchangeable
+    step to step."""
+    if cfg.family in ("ssm", "hybrid"):
+        per = cfg.attn_every if cfg.family == "hybrid" else 0
+        skv = cache.shared_kv
+        mcs = []
+        for l in range(cfg.n_layers):
+            if per and l % per == per - 1:
+                inv = l // per
+                skv_l = jax.tree.map(lambda x: x[inv], skv)
+                h, skv_new = _shared_block_decode(
+                    cfg, params["shared_attn"], h, skv_l, positions)
+                skv = jax.tree.map(
+                    lambda buf, new: buf.at[inv].set(new), skv, skv_new)
+            lp = layer_slice(params["layers"], l)
+            mc_l = jax.tree.map(lambda x: x[l], cache.mamba)
+            h, mc_new = _layer_decode(cfg, params, lp, jnp.asarray(l), h,
+                                      mc_l, positions)
+            mcs.append(mc_new)
+        mc = jax.tree.map(lambda *xs: jnp.stack(xs), *mcs)
+        return h, LayerCache(None, mc, skv)
+    kvs = []
+    for l in range(cfg.n_layers):
+        lp = layer_slice(params["layers"], l)
+        kv_l = jax.tree.map(lambda x: x[l], cache.kv)
+        h, kv_new = _layer_decode(cfg, params, lp, jnp.asarray(l), h,
+                                  kv_l, positions)
+        kvs.append(kv_new)
+    kv = jax.tree.map(lambda *xs: jnp.stack(xs), *kvs)
+    return h, LayerCache(kv, None, None)
+
+
 def decode_step(cfg: ArchConfig, params: dict, cache: LayerCache,
                 token: Array, positions: Array) -> Tuple[Array, LayerCache]:
     """One decode step. token (B, 1) int32 (or (B,1,D) embeds);
@@ -359,6 +413,12 @@ def decode_step(cfg: ArchConfig, params: dict, cache: LayerCache,
     from repro.runtime.meshctx import DP, hint
     h = embed_inputs(cfg, params, token)
     h = hint(h, DP, None, None)
+
+    if has_hetero(params["layers"]):
+        h, new_cache = _decode_step_unrolled(cfg, params, cache, h,
+                                             positions)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        return unembed(cfg, params, h), new_cache
 
     if cfg.family in ("ssm", "hybrid"):
         if cfg.family == "hybrid":

@@ -1,0 +1,315 @@
+"""Heterogeneous packed serving: mixed-method plans pack EVERY linear
+into a variant-tagged format and forward through the per-variant fused
+kernels (interpret mode on CPU) — partial coverage, mixed N:M patterns,
+rank-r low-rank, sparse-only and binary+low-rank variants included."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import compressor as compressor_lib
+from repro.core.apply import slab_linear
+from repro.core.packed_model import (PackedLinear, PackedStack,
+                                     pack_linear, pack_plan_decs,
+                                     packed_matmul, variant_of)
+from repro.core.pipeline import compress_model, linear_paths
+from repro.core.plan import CompressionPlan
+from repro.core.slab import SLaBConfig, SLaBDecomposition
+from repro.core.sparsity import prune_mask
+from repro.data import calibration_batch
+from repro.models import lm
+from repro.models.common import positions_for
+
+MIXED_PLAN = ("attn.*=sparsegpt@pattern=2:4; mlp.w_gate=hassle@rank=4; "
+              "*=slab")
+
+
+def _cfg(arch="stablelm_12b", **kw):
+    return configs.get(arch, smoke=True).with_(dtype=jnp.float32, **kw)
+
+
+def _compress_packed(cfg, plan_spec, seed=0, iters=2):
+    params, _ = lm.init(cfg, jax.random.PRNGKey(seed))
+    cal = calibration_batch(cfg.vocab, n_seq=2, seq_len=16)
+    plan = CompressionPlan.parse(plan_spec,
+                                 base=SLaBConfig(cr=0.5, iters=iters))
+    dense_c, stats, decs = compress_model(cfg, params, cal, plan=plan,
+                                          keep_decompositions=True)
+    packed, rep = pack_plan_decs(dense_c, decs, cfg.n_layers, plan)
+    return dense_c, packed, rep, stats, decs
+
+
+def _max_rel(a, b):
+    return (float(jnp.max(jnp.abs(a - b)))
+            / max(float(jnp.max(jnp.abs(a))), 1e-12))
+
+
+@pytest.fixture(scope="module")
+def mixed_setup():
+    cfg = _cfg()
+    dense_c, packed, rep, stats, decs = _compress_packed(cfg, MIXED_PLAN)
+    return cfg, dense_c, packed, rep, stats, decs
+
+
+def test_mixed_plan_zero_dense_fallback(mixed_setup):
+    """The acceptance-criteria property: every linear of a mixed
+    sparsegpt/hassle/slab plan serves on the fused kernel path."""
+    cfg, _, packed, rep, stats, decs = mixed_setup
+    n_lin = cfg.n_layers * len(linear_paths(cfg))
+    assert len(decs) == n_lin            # pruning methods keep decs too
+    assert rep.n_packed == n_lin
+    assert rep.fallback == []
+    # attn.{wq,wk,wv,wo} -> N:M sparsegpt; mlp.w_gate -> rank-4 hassle;
+    # mlp.{w_up,w_down} -> full SLaB
+    assert rep.by_variant == {"sparse-nm": 4 * cfg.n_layers,
+                              "lowrank-dense": cfg.n_layers,
+                              "slab-dense": 2 * cfg.n_layers}
+    # every (layer, path) stat carries its servable variant
+    assert all(s.variant for s in stats)
+
+
+def test_mixed_plan_fast_path_stays_scannable(mixed_setup):
+    """Full-coverage single-variant paths stack into plain PackedLinears
+    (the lax.scan fast path) — no PackedStack, no unrolling."""
+    _, _, packed, _, _, _ = mixed_setup
+    leaves = jax.tree.leaves(
+        packed["layers"],
+        is_leaf=lambda x: isinstance(x, (PackedLinear, PackedStack)))
+    assert any(isinstance(l, PackedLinear) for l in leaves)
+    assert not any(isinstance(l, PackedStack) for l in leaves)
+    wg = packed["layers"]["mlp"]["w_gate"]
+    assert wg.variant == "lowrank-dense" and wg.rank == 4
+
+
+def test_mixed_packed_forward_matches_dense(mixed_setup):
+    cfg, dense_c, packed, _, _, _ = mixed_setup
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    f_d, _ = lm.forward(cfg, dense_c, toks)
+    f_p, _ = lm.forward(cfg, packed, toks)
+    assert _max_rel(f_d, f_p) < 1e-4
+
+
+def test_mixed_packed_decode_matches_dense(mixed_setup):
+    cfg, dense_c, packed, _, _, _ = mixed_setup
+    b, s = 2, 4
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, cfg.vocab)
+    cd = lm.init_cache(cfg, b, s)
+    cp = lm.init_cache(cfg, b, s)
+    for t in range(s):
+        pos = positions_for(cfg, b, 1, offset=t)
+        ld, cd = lm.decode_step(cfg, dense_c, cd, toks[:, t:t + 1], pos)
+        lp, cp = lm.decode_step(cfg, packed, cp, toks[:, t:t + 1], pos)
+    assert _max_rel(ld, lp) < 1e-4
+
+
+def test_acceptance_plan_serves_fully_packed():
+    """The issue's acceptance plan, verbatim: sparsegpt@2:4 attention +
+    rank-4 hassle MLPs + slab catch-all packs every linear and matches
+    the dense-applied forward in interpret mode."""
+    cfg = _cfg()
+    dense_c, packed, rep, _, _ = _compress_packed(
+        cfg, "attn.*=sparsegpt@pattern=2:4; mlp.*=hassle@rank=4; *=slab")
+    assert rep.fallback == []
+    assert rep.n_packed == cfg.n_layers * len(linear_paths(cfg))
+    assert set(rep.by_variant) == {"sparse-nm", "lowrank-dense"}
+    toks = jax.random.randint(jax.random.PRNGKey(6), (2, 8), 0, cfg.vocab)
+    f_d, _ = lm.forward(cfg, dense_c, toks)
+    f_p, _ = lm.forward(cfg, packed, toks)
+    assert _max_rel(f_d, f_p) < 1e-4
+
+
+# ------------------------------------------------------------------
+# Partial coverage + mixed patterns per path (the lifted restrictions)
+# ------------------------------------------------------------------
+
+HETERO_PLAN = ("0/attn.wq=skip; 0/attn.wk=slab@pattern=2:4; "
+               "attn.wk=slab@pattern=4:8; *=slab")
+
+
+@pytest.fixture(scope="module")
+def hetero_setup():
+    cfg = _cfg()
+    dense_c, packed, rep, stats, decs = _compress_packed(cfg, HETERO_PLAN)
+    return cfg, dense_c, packed, rep
+
+
+def test_partial_coverage_and_mixed_patterns_pack(hetero_setup):
+    """Regression for the pat_of[(0, name)] KeyError: attn.wq layer 0 is
+    skipped (not servable) and attn.wk's pattern differs per layer —
+    both previously fell back to dense for the whole path."""
+    cfg, _, packed, rep = hetero_setup
+    n_lin = cfg.n_layers * len(linear_paths(cfg))
+    assert rep.n_packed == n_lin - 1          # only L0/attn.wq is dense
+    assert rep.fallback == []
+    assert rep.by_variant["slab-nm"] == 2     # 2:4 at L0, 4:8 at L1
+    wq = packed["layers"]["attn"]["wq"]
+    assert isinstance(wq, PackedStack)
+    assert wq.dense_members == (0,) and wq.members == ((1,),)
+    assert isinstance(wq.at_layer(0), jax.Array)     # dense leaf
+    assert wq.at_layer(1).variant == "slab-dense"
+    wk = packed["layers"]["attn"]["wk"]
+    assert isinstance(wk, PackedStack) and wk.dense is None
+    pats = {g.m_pat for g in wk.groups}
+    assert pats == {4, 8} and wk.variant_counts() == {"slab-nm": 2}
+
+
+def test_hetero_forward_and_decode_match_dense(hetero_setup):
+    """PackedStack leaves route the model through the unrolled layer
+    loop; numerics must match the scanned dense-equivalent path."""
+    cfg, dense_c, packed, _ = hetero_setup
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0, cfg.vocab)
+    f_d, _ = lm.forward(cfg, dense_c, toks)
+    f_p, _ = lm.forward(cfg, packed, toks)
+    assert _max_rel(f_d, f_p) < 1e-4
+    b, s = 2, 3
+    cd = lm.init_cache(cfg, b, s)
+    cp = lm.init_cache(cfg, b, s)
+    for t in range(s):
+        pos = positions_for(cfg, b, 1, offset=t)
+        ld, cd = lm.decode_step(cfg, dense_c, cd, toks[:, t:t + 1], pos)
+        lp, cp = lm.decode_step(cfg, packed, cp, toks[:, t:t + 1], pos)
+    assert _max_rel(ld, lp) < 1e-4
+
+
+def test_ssm_hetero_decode_matches_dense():
+    """Unrolled decode on the SSM family (stacked mamba caches restack
+    correctly across the Python layer loop)."""
+    cfg = _cfg("mamba2_1_3b")
+    dense_c, packed, rep, _, _ = _compress_packed(
+        cfg, "0/mamba.out=skip; *=slab")
+    assert isinstance(packed["layers"]["mamba"]["out"], PackedStack)
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 3), 0, cfg.vocab)
+    f_d, _ = lm.forward(cfg, dense_c, toks)
+    f_p, _ = lm.forward(cfg, packed, toks)
+    assert _max_rel(f_d, f_p) < 1e-4
+    cd = lm.init_cache(cfg, 2, 3)
+    cp = lm.init_cache(cfg, 2, 3)
+    for t in range(3):
+        pos = positions_for(cfg, 2, 1, offset=t)
+        ld, cd = lm.decode_step(cfg, dense_c, cd, toks[:, t:t + 1], pos)
+        lp, cp = lm.decode_step(cfg, packed, cp, toks[:, t:t + 1], pos)
+    assert _max_rel(ld, lp) < 1e-4
+
+
+@pytest.mark.slow
+def test_hybrid_hetero_decode_matches_dense():
+    """Unrolled decode on the hybrid family: the shared transformer
+    block fires at the right layers and its stacked KV caches update
+    in place across the Python layer loop."""
+    cfg = _cfg("zamba2_7b", n_layers=3)        # shared block at layer 2
+    dense_c, packed, rep, _, _ = _compress_packed(
+        cfg, "0/mamba.out=skip; *=slab")
+    assert isinstance(packed["layers"]["mamba"]["out"], PackedStack)
+    toks = jax.random.randint(jax.random.PRNGKey(5), (2, 3), 0, cfg.vocab)
+    f_d, _ = lm.forward(cfg, dense_c, toks)
+    f_p, _ = lm.forward(cfg, packed, toks)
+    assert _max_rel(f_d, f_p) < 1e-4
+    cd = lm.init_cache(cfg, 2, 3)
+    cp = lm.init_cache(cfg, 2, 3)
+    for t in range(3):
+        pos = positions_for(cfg, 2, 1, offset=t)
+        ld, cd = lm.decode_step(cfg, dense_c, cd, toks[:, t:t + 1], pos)
+        lp, cp = lm.decode_step(cfg, packed, cp, toks[:, t:t + 1], pos)
+    assert _max_rel(ld, lp) < 1e-4
+
+
+# ------------------------------------------------------------------
+# Variant round-trips (packed_matmul == dense-applied decomposition)
+# ------------------------------------------------------------------
+
+def _dec(seed, n=64, k=128, *, sparse="dense", rank=0, binary=False):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    w = jax.random.normal(ks[0], (n, k), jnp.float32) * 0.1
+    if sparse is None:
+        w_s = jnp.zeros((n, k), jnp.float32)
+    elif sparse == "nm":
+        w_s = jnp.where(prune_mask(jnp.abs(w), 0.5, pattern="2:4"), w, 0.0)
+    else:
+        w_s = jnp.where(prune_mask(jnp.abs(w), 0.4), w, 0.0)
+    if rank:
+        u = jax.random.normal(ks[1], (n, rank), jnp.float32) * 0.2
+        v = jax.random.normal(ks[2], (k, rank), jnp.float32) * 0.2
+    else:
+        u = jnp.zeros((n, 0), jnp.float32)
+        v = jnp.zeros((k, 0), jnp.float32)
+    if binary:
+        w_b = jnp.where(jax.random.bernoulli(ks[3], 0.5, (n, k)),
+                        1, -1).astype(jnp.int8)
+    else:
+        w_b = jnp.zeros((0, 0), jnp.int8)
+    return SLaBDecomposition(w_s, u, v, w_b)
+
+
+@pytest.mark.parametrize(
+    "kw,pattern,variant",
+    [(dict(sparse="nm", rank=2, binary=True), "2:4", "slab-nm"),
+     (dict(sparse="dense", rank=3, binary=True), None, "slab-dense"),
+     (dict(sparse=None, rank=2, binary=True), None, "binlr"),
+     (dict(sparse="nm", rank=4), "2:4", "lowrank-nm"),
+     (dict(sparse="dense", rank=4), None, "lowrank-dense"),
+     (dict(sparse=None, rank=3), None, "lowrank"),
+     (dict(sparse="nm"), "2:4", "sparse-nm"),
+     (dict(sparse="dense"), None, "sparse-dense")],
+    ids=lambda p: p if isinstance(p, str) else "")
+def test_variant_roundtrip(kw, pattern, variant):
+    dec = _dec(11, **kw)
+    assert variant_of(dec, pattern) == variant
+    pl = pack_linear(dec, pattern)
+    assert pl.variant == variant
+    x = jax.random.normal(jax.random.PRNGKey(12), (8, 128), jnp.float32)
+    got = packed_matmul(x, pl, interpret=True)
+    want = slab_linear(x, dec)                 # dense-applied oracle
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_binary_without_lowrank_serves_sparse_only():
+    """W_L ⊙ W_B with empty W_L is identically zero (core.slab
+    semantics): a lone binary term must not change the variant."""
+    dec = _dec(13, sparse="dense", rank=0, binary=True)
+    assert variant_of(dec, None) == "sparse-dense"
+    x = jax.random.normal(jax.random.PRNGKey(14), (4, 128), jnp.float32)
+    got = packed_matmul(x, pack_linear(dec, None), interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(x @ dec.w_s.T),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pack_linear_rejects_pattern_mismatch():
+    dec = _dec(15, sparse="dense")             # unstructured, not 2:4
+    with pytest.raises(ValueError, match="not 2:4 sparse"):
+        pack_linear(dec, "2:4")
+
+
+# ------------------------------------------------------------------
+# SoLA soft-activation-sparsity compressor
+# ------------------------------------------------------------------
+
+def test_sola_soft_prunes_on_wanda_support():
+    w = jax.random.normal(jax.random.PRNGKey(20), (32, 64), jnp.float32)
+    an = jnp.abs(jax.random.normal(jax.random.PRNGKey(21), (64,))) + 0.1
+    stats = compressor_lib.LinearStats(norms=an)
+    scfg = SLaBConfig(cr=0.5)
+    sola = compressor_lib.get("sola", scfg, softness=0.5).compress(w, stats)
+    wanda = compressor_lib.get("wanda", scfg).compress(w, stats)
+    # same kept support as wanda, shrunk values, no extra zeros
+    np.testing.assert_array_equal(np.asarray(sola.dense != 0),
+                                  np.asarray(wanda.dense != 0))
+    assert float(jnp.max(jnp.abs(sola.dense) - jnp.abs(wanda.dense))) <= 0
+    assert float(jnp.min(jnp.where(sola.dense != 0,
+                                   jnp.abs(sola.dense), jnp.inf))) > 0
+    assert abs(sola.cr - 0.5) < 0.05
+    # softness=0 is exactly wanda; decs pack as sparse-only
+    hard = compressor_lib.get("sola", scfg, softness=0.0).compress(w, stats)
+    np.testing.assert_allclose(np.asarray(hard.dense),
+                               np.asarray(wanda.dense), rtol=1e-6)
+    assert variant_of(sola.dec, None) == "sparse-dense"
+
+
+def test_sola_registered_and_plan_selectable():
+    assert "sola" in compressor_lib.available()
+    plan = CompressionPlan.parse("mlp.*=sola@softness=0.25; *=slab")
+    r = plan.resolve(0, "mlp.w_up")
+    assert r.method == "sola" and r.compressor.softness == 0.25
+    assert r.needs == frozenset({"norms"})

@@ -104,6 +104,71 @@ def test_kernel_vs_dense_reconstruction():
                                rtol=1e-4, atol=1e-4)
 
 
+def _rank_factors(seed, n, k, r):
+    ku, kv = jax.random.split(jax.random.PRNGKey(seed))
+    return (jax.random.normal(ku, (n, r), jnp.float32) * 0.2,
+            jax.random.normal(kv, (k, r), jnp.float32) * 0.2)
+
+
+@pytest.mark.parametrize("rank", [2, 4])
+def test_binlr_rank_r_matches_ref(rank):
+    m, n, k, bm, bn, bk = 32, 64, 128, 32, 32, 64
+    x, w = _mk(7, m, n, k, jnp.float32)
+    bp = packing.pack_sign_bits(jnp.where(w >= 0, 1, -1).astype(jnp.int8))
+    u, v = _rank_factors(8, n, k, rank)
+    want = ref.binlr_ref(x, bp, u, v)
+    got = ops.binlr(x, bp, u, v, bm=bm, bn=bn, bk=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("rank", [2, 4])
+def test_slab_matmul_rank_r_matches_ref(rank):
+    """rank-r SLaB: the fused kernel accumulates r rank-1 binary terms
+    against one streamed B tile."""
+    m, n, k, bm, bn, bk = 32, 64, 128, 32, 32, 64
+    x, w = _mk(9, m, n, k, jnp.float32)
+    dec = slab.slab_decompose(w, None, SLaBConfig(cr=0.5, iters=2))
+    bp = packing.pack_sign_bits(dec.w_b)
+    u, v = _rank_factors(10, n, k, rank)
+    want = ref.slab_matmul_ref(x, dec.w_s, bp, u, v)
+    got = ops.slab_matmul(x, dec.w_s, bp, u, v, bm=bm, bn=bn, bk=bk,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+@pytest.mark.parametrize("rank", [1, 4])
+def test_slab_lr_matmul_matches_ref(shape, rank):
+    """Sparse + rank-r low-rank, NO binary (HASSLE-free-style decs)."""
+    m, n, k, bm, bn, bk = shape
+    x, w = _mk(11, m, n, k, jnp.float32)
+    dec = slab.slab_decompose(w, None, SLaBConfig(cr=0.5, iters=2))
+    u, v = _rank_factors(12, n, k, rank)
+    want = ref.slab_lr_matmul_ref(x, dec.w_s, u, v)
+    got = ops.slab_lr_matmul(x, dec.w_s, u, v, bm=bm, bn=bn, bk=bk,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("rank", [1, 4])
+def test_slab_nm_lr_matmul_matches_ref(rank):
+    m, n, k, bm, bn, bk = 32, 64, 128, 32, 32, 64
+    x, w = _mk(13, m, n, k, jnp.float32)
+    dec = slab.slab_decompose(w, None,
+                              SLaBConfig(cr=0.5, iters=2, pattern="2:4"))
+    pk = packing.pack_decomposition(dec, pattern="2:4")
+    s = pk.sparse
+    u, v = _rank_factors(14, n, k, rank)
+    want = ref.slab_nm_lr_matmul_ref(x, s.values, s.indices, s.m, u, v)
+    got = ops.slab_nm_lr_matmul(x, s.values, s.indices, s.m, u, v,
+                                bm=bm, bn=bn, bk=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_batched_leading_dims():
     """ops wrappers flatten (B, S, K) inputs."""
     x3 = jax.random.normal(jax.random.PRNGKey(5), (4, 8, 128), jnp.float32)

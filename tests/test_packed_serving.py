@@ -65,10 +65,12 @@ def test_packed_stack_slices_through_scan(packed_setup):
     _, _, packed, _ = packed_setup
     wq = packed["layers"]["attn"]["wq"]
     assert isinstance(wq, PackedLinear)
+    assert wq.variant == "slab-nm" and wq.rank == 1
     one = jax.tree.map(lambda x: x[0], wq)
-    x = jax.random.normal(jax.random.PRNGKey(3), (4, one.v.shape[-1]))
+    assert one.variant == wq.variant            # aux survives slicing
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, one.d_in))
     y = packed_matmul(x, one, interpret=True)
-    assert y.shape == (4, one.u.shape[-1])
+    assert y.shape == (4, one.d_out)
 
 
 def test_unstructured_pack_mode():
