@@ -1,0 +1,96 @@
+"""Sensitivity-driven CR allocator vs the uniform-CR baseline.
+
+Starts the allocator perf trajectory: on the cached trained model, one
+streaming calibration pass collects every layer's tapped statistics;
+the uniform plan and the water-filled plan are then both compressed
+from those SAME statistics (so their activation-weighted errors are
+directly comparable), at a matched (±1%) size-weighted global CR.
+
+Reported per method: summed err_after (the acceptance metric), the
+measured global CR of both plans, the allocator's CR spread, and
+wall-clock — the allocate+compress flow (probe + solve + compress, one
+forward pass) against the classic layer-wise run (capture + propagate,
+two forwards per layer) at the same uniform CR. Emits
+experiments/benchmarks/BENCH_allocator.json.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.allocator import measured_global_cr
+from repro.core.pipeline import collect_model_stats
+from repro.data import calibration_batch
+
+from benchmarks.common import (compress_with_auto, compress_with_plan,
+                               compress_with_stats, emit, trained_model)
+
+BUDGET = 0.5
+METHODS = ["wanda", "slab@iters=4"]
+
+
+def run(fast: bool = False):
+    methods = METHODS[:1] if fast else METHODS
+    out = {"arch": None, "budget": BUDGET, "methods": {}}
+    for spec in methods:
+        name = spec.split("@")[0]
+        template = f"*={spec}"
+        uniform_plan = f"*={spec}@cr={BUDGET}" if "@" not in spec \
+            else f"*={spec},cr={BUDGET}"
+
+        cfg, params = trained_model()
+        out["arch"] = cfg.name
+        cal = calibration_batch(cfg.vocab, n_seq=16, seq_len=128)
+        t0 = time.monotonic()
+        stats = collect_model_stats(cfg, params, cal, plan=template)
+        probe_s = time.monotonic() - t0
+
+        _, _, urows, uni_s = compress_with_stats(uniform_plan, stats)
+        _, _, arows, alloc_s, alloc = compress_with_auto(
+            BUDGET, template, stats=stats)
+        # the classic two-forwards-per-layer protocol at the same
+        # uniform CR — the wall-clock baseline a user pays today
+        _, _, _, classic_s = compress_with_plan(uniform_plan)
+
+        err_u = sum(s.err_after for s in urows)
+        err_a = sum(s.err_after for s in arows)
+        out["methods"][name] = {
+            "plan_template": template,
+            "err_after_sum": {"uniform": err_u, "allocated": err_a,
+                              "improvement": (err_u - err_a) / err_u},
+            "global_cr": {"uniform": measured_global_cr(params, urows),
+                          "allocated": measured_global_cr(params, arows)},
+            "cr_spread": sorted(set(alloc.crs.values())),
+            "n_groups": len(alloc.crs),
+            "predicted_err_sum": alloc.predicted_err,
+            "wall_s": {"probe_pass": probe_s,
+                       "allocate_plus_compress": alloc_s,
+                       "uniform_from_stats": uni_s,
+                       "uniform_classic": classic_s},
+            "calib_forwards": alloc.stats.n_forwards,
+        }
+    emit("BENCH_allocator", out)
+    return out
+
+
+def check(rows) -> bool:
+    """Acceptance: allocated summed err_after <= uniform at equal (±1%)
+    measured global CR, from exactly one calibration pass."""
+    ok = bool(rows["methods"])
+    for name, m in rows["methods"].items():
+        err = m["err_after_sum"]
+        cr = m["global_cr"]
+        ok = ok and err["allocated"] <= err["uniform"] * (1 + 1e-6)
+        ok = ok and abs(cr["allocated"] - cr["uniform"]) <= 0.01
+    return ok
+
+
+if __name__ == "__main__":
+    rows = run()
+    for name, m in rows["methods"].items():
+        e, c, w = m["err_after_sum"], m["global_cr"], m["wall_s"]
+        print(f"{name}: err {e['uniform']:.4g} -> {e['allocated']:.4g} "
+              f"({100 * e['improvement']:.1f}% better) at CR "
+              f"{c['uniform']:.3f} vs {c['allocated']:.3f}; "
+              f"alloc {w['allocate_plus_compress']:.1f}s vs classic "
+              f"{w['uniform_classic']:.1f}s")
+    print("allocator check:", "PASS" if check(rows) else "FAIL")

@@ -84,6 +84,38 @@ def compress_with_plan(plan) -> Tuple[object, dict, list, float]:
     return cfg, new, stats, time.monotonic() - t0
 
 
+def compress_with_stats(plan, stats) -> Tuple[object, dict, list, float]:
+    """Compress the cached trained model from precollected
+    ``ModelTapStats`` (no calibration forwards; the stats-path twin of
+    ``compress_with_plan`` — both plans of an allocator comparison
+    should go through here so their errors share one set of norms)."""
+    jax.clear_caches()
+    cfg, params = trained_model()
+    t0 = time.monotonic()
+    new, rows = compress_model(cfg, params, None, plan=plan, stats=stats)
+    return cfg, new, rows, time.monotonic() - t0
+
+
+def compress_with_auto(budget: float, template="*=slab",
+                       stats=None) -> Tuple[object, dict, list, float,
+                                            object]:
+    """Sensitivity-allocate per-layer CRs at ``budget`` over
+    ``template`` and compress — one calibration pass total (reused when
+    ``stats`` is given). Returns (cfg, params, stats_rows, seconds,
+    Allocation)."""
+    from repro.core.allocator import allocate_plan
+    jax.clear_caches()
+    cfg, params = trained_model()
+    cal = (None if stats is not None
+           else calibration_batch(cfg.vocab, n_seq=16, seq_len=128))
+    t0 = time.monotonic()
+    alloc = allocate_plan(cfg, params, cal, budget=budget,
+                          template=template, stats=stats)
+    new, rows = compress_model(cfg, params, None, plan=alloc.plan,
+                               stats=alloc.stats)
+    return cfg, new, rows, time.monotonic() - t0, alloc
+
+
 def compress_and_eval(method: str, cr: float, pattern: Optional[str],
                       iters: int = 8,
                       group=(1, 0)) -> Dict[str, float]:

@@ -14,13 +14,13 @@ import sys
 import time
 
 JOBS = ["table1", "table2", "table3", "fig1", "fig3", "kernels",
-        "packed_serve"]
+        "packed_serve", "allocator"]
 
 
 def run_inline(name: str, fast: bool) -> bool:
-    from benchmarks import (bench_fig1, bench_fig3, bench_kernels,
-                            bench_packed_serve, bench_table1,
-                            bench_table2, bench_table3)
+    from benchmarks import (bench_allocator, bench_fig1, bench_fig3,
+                            bench_kernels, bench_packed_serve,
+                            bench_table1, bench_table2, bench_table3)
     jobs = {
         "table1": lambda: bench_table1.check(bench_table1.run(fast)),
         "table2": lambda: bench_table2.check(bench_table2.run(fast)),
@@ -30,6 +30,8 @@ def run_inline(name: str, fast: bool) -> bool:
         "kernels": lambda: (bench_kernels.run(), True)[1],
         "packed_serve": lambda: bench_packed_serve.check(
             bench_packed_serve.run()),
+        "allocator": lambda: bench_allocator.check(
+            bench_allocator.run(fast)),
     }
     return bool(jobs[name]())
 

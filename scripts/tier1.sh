@@ -13,6 +13,10 @@
 #                               # formats, per-variant kernels,
 #                               # heterogeneous stacks, e2e packed
 #                               # forward/decode
+#   scripts/tier1.sh allocator  # budget-allocator loop: water-filling
+#                               # solver, @auto plans, plan DSL
+#                               # round-trips, cross-variant kernel
+#                               # parity sweep
 #   scripts/tier1.sh <pytest args...>   # anything else passes through
 #
 # The full suite (the tier-1 gate, incl. @slow) stays:
@@ -39,6 +43,13 @@ if [ "${1:-}" = "packed" ]; then
     shift
     exec python -m pytest -q -m "not slow" \
         tests/test_kernels.py tests/test_packed_serving.py \
-        tests/test_hetero_packing.py "$@"
+        tests/test_hetero_packing.py tests/test_variant_parity.py "$@"
+fi
+
+if [ "${1:-}" = "allocator" ]; then
+    shift
+    exec python -m pytest -q -m "not slow" \
+        tests/test_allocator.py tests/test_plan_roundtrip.py \
+        tests/test_plan.py tests/test_variant_parity.py "$@"
 fi
 exec python -m pytest -q -m "not slow" "$@"

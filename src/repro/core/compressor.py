@@ -96,6 +96,15 @@ class Compressor:
     def compress(self, w: Array, stats: LinearStats) -> CompressedLinear:
         raise NotImplementedError
 
+    def keep_fraction_for(self, cr: float, d_out: int, d_in: int) -> float:
+        """Fraction of W_S entries this method keeps at compression
+        ratio ``cr`` on a (d_out, d_in) matrix — the budget-allocator
+        probe hook (``core.allocator``). The base model is pure pruning
+        (survivors keep their full bit-width); methods that spend budget
+        on other terms (binary / low-rank factors) override. Return
+        <= 0 when ``cr`` is infeasible for the shape."""
+        return 1.0 - cr
+
 
 # ------------------------------------------------------------------
 # Registry
@@ -160,6 +169,15 @@ class SLaBCompressor(Compressor):
         dec = slab_decompose(w, stats.norms, self.scfg)
         return CompressedLinear(reconstruct(dec), dec,
                                 compression_ratio(dec, self.scfg.bits))
+
+    def keep_fraction_for(self, cr: float, d_out: int, d_in: int) -> float:
+        try:
+            return keep_fraction(cr, self.scfg.bits, d_out, d_in,
+                                 rank=self.scfg.rank,
+                                 include_binary=self.scfg.include_binary,
+                                 include_lowrank=self.scfg.include_lowrank)
+        except ValueError:
+            return 0.0
 
 
 @register("wanda")
@@ -279,6 +297,15 @@ class HassleFreeCompressor(Compressor):
         dense = jnp.asarray(w_s + low, jnp.float32)
         return CompressedLinear(dense, dec,
                                 compression_ratio(dec, self.scfg.bits))
+
+    def keep_fraction_for(self, cr: float, d_out: int, d_in: int) -> float:
+        try:
+            return keep_fraction(cr, self.scfg.bits, d_out, d_in,
+                                 rank=max(self.scfg.rank, 1),
+                                 include_binary=False,
+                                 include_lowrank=True)
+        except ValueError:
+            return 0.0
 
 
 @register("sola")

@@ -40,6 +40,20 @@ then run (and propagate error through) the compressed shared weights.
 
 Per the paper, embeddings and the LM head are excluded (§III-A4); norms,
 biases and other 1-D leaves are untouched.
+
+Stat collection and compression are **separable stages**:
+``collect_model_stats`` runs ONE streaming calibration pass over the
+uncompressed model and returns every layer's tapped statistics as a
+``ModelTapStats``; ``compress_model(..., stats=...)`` then compresses
+from those precollected statistics without any further forwards. The
+sensitivity-driven budget allocator (``core.allocator``) is built on
+this split — it probes per-layer CR→error frontiers from one pass and
+hands both the concrete plan and the same stats back to the
+compression stage, so allocate+compress costs exactly one calibration
+pass. A plan with unallocated ``@auto`` rules routes through the
+allocator automatically. (The classic single-call path keeps the
+paper's error-propagation protocol: stats are tapped per layer from
+the already-compressed prefix.)
 """
 from __future__ import annotations
 
@@ -70,6 +84,24 @@ class CompressStats:
     method: str = ""
     variant: str = ""   # packed-serving variant (core.packed_model
                         # variant_of); "" = no kernel-servable form
+    cr_requested: float = 0.0   # the CR the resolved plan rule asked for
+                                # (allocator decisions stay observable
+                                # next to the measured value)
+
+
+@dataclasses.dataclass
+class ModelTapStats:
+    """Whole-model tap statistics from ONE streaming calibration pass.
+
+    Keys are ``(layer, path)`` with ``path`` a ``linear_paths`` /
+    ``shared_linear_paths`` name (shared.* entries appear at the shared
+    block's first firing layer, matching where the pipeline compresses
+    them). ``n_forwards`` counts the ``models.lm._layer_fwd``
+    invocations consumed — ``n_layers * n_chunks`` for one pass."""
+
+    norms: Dict[Tuple[int, str], Array]
+    hessians: Dict[Tuple[int, str], Array]
+    n_forwards: int = 0
 
 
 def _get(d: dict, path: str):
@@ -118,16 +150,22 @@ def shared_linear_paths(cfg: ArchConfig) -> List[str]:
 
 
 def _capture_layer(cfg: ArchConfig, params: dict, lp: dict, idx: int,
-                   chunks: Sequence[Array], positions: Sequence[Array],
-                   paths: Sequence[str], hessian_names: set
+                   chunks, positions: Sequence[Array],
+                   paths: Sequence[str], hessian_names: set,
+                   propagate: bool = False
                    ) -> Tuple[Dict[str, Array], Dict[str, Array]]:
     """Run layer ``idx``'s real forward over every calibration chunk
     under ONE activation-tap capture: statistics accumulate across
-    chunks (streaming multi-batch calibration)."""
+    chunks (streaming multi-batch calibration). ``propagate`` writes
+    each chunk's output back into ``chunks`` (the uncompressed-model
+    stats pass, where the capture forward doubles as propagation)."""
     with tap_capture(hessian=bool(hessian_names),
                      hessian_names=set(hessian_names)) as tap:
-        for h, pos in zip(chunks, positions):
-            lm._layer_fwd(cfg, params, lp, jnp.asarray(idx), h, pos)
+        for i in range(len(chunks)):
+            out, _ = lm._layer_fwd(cfg, params, lp, jnp.asarray(idx),
+                                   chunks[i], positions[i])
+            if propagate:
+                chunks[i] = out
     acts: Dict[str, Array] = {}
     hess: Dict[str, Array] = {}
     for pth in paths:
@@ -156,6 +194,70 @@ def layer_tap_stats(cfg: ArchConfig, params: dict, lp: dict, idx: int,
         else set(hessian_names or ())
     return _capture_layer(cfg, params, lp, idx, [h], [positions],
                           paths, names)
+
+
+def collect_model_stats(cfg: ArchConfig, params: dict, calib,
+                        plan=None,
+                        hessian_names=None,
+                        progress: Optional[Callable[[str], None]] = None
+                        ) -> ModelTapStats:
+    """ONE streaming calibration pass over the *uncompressed* model,
+    tapping every layer's statistics (the allocator's sensitivity probe
+    and the input to ``compress_model(stats=...)``).
+
+    Each layer's capture forward doubles as the propagation to the next
+    layer (weights are unchanged), so the whole collection costs exactly
+    ``n_layers * n_chunks`` ``_layer_fwd`` calls — one pass. Hessians
+    (X^T X) are accumulated for linears whose plan-resolved compressor
+    declares ``"hessian" in needs`` (``@auto`` rules are probed at the
+    base config); ``hessian_names`` overrides (a set of path names, or
+    True for all)."""
+    if plan is not None:
+        plan = plan_lib.CompressionPlan.parse(plan)
+    spec = (calib if isinstance(calib, plan_lib.CalibrationSpec)
+            else plan_lib.CalibrationSpec(np.asarray(calib)))
+    chunks: List[Array] = []
+    positions: List[Array] = []
+    for t in spec.batches():
+        h = lm.embed_inputs(cfg, params, jnp.asarray(t))
+        chunks.append(h)
+        positions.append(positions_for(cfg, h.shape[0], h.shape[1]))
+
+    norms: Dict[Tuple[int, str], Array] = {}
+    hessians: Dict[Tuple[int, str], Array] = {}
+    n_fwd = 0
+    shared_pending = bool(cfg.family == "hybrid" and cfg.attn_every
+                          and "shared_attn" in params)
+    for l in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[l], params["layers"])
+        shared_now = (shared_pending
+                      and l % cfg.attn_every == cfg.attn_every - 1)
+        tap_paths = linear_paths(cfg) + (shared_linear_paths(cfg)
+                                         if shared_now else [])
+        if hessian_names is True:
+            hnames = set(tap_paths)
+        elif hessian_names is not None:
+            hnames = set(hessian_names) & set(tap_paths)
+        elif plan is not None:
+            hnames = set()
+            for p in tap_paths:
+                r = plan.resolve(l, p, allow_auto=True)
+                if r is not None and "hessian" in r.needs:
+                    hnames.add(p)
+        else:
+            hnames = set()
+        acts, hess = _capture_layer(cfg, params, lp, l, chunks, positions,
+                                    tap_paths, hnames, propagate=True)
+        n_fwd += len(chunks)
+        for pth, an in acts.items():
+            norms[(l, pth)] = an
+        for pth, hz in hess.items():
+            hessians[(l, pth)] = hz
+        if shared_now:
+            shared_pending = False
+        if progress:
+            progress(f"stats layer {l + 1}/{cfg.n_layers} tapped")
+    return ModelTapStats(norms, hessians, n_fwd)
 
 
 def _expert_hessians(hz: Optional[Array], n_exp: int, d_in: int
@@ -221,7 +323,8 @@ def _compress_leaf(layer: int, pth: str, w: Array, an: Optional[Array],
         w_new = jnp.stack(outs)
         cr = float(np.mean(crs)) if crs else comp.scfg.cr
         st = CompressStats(layer, pth, float(np.sqrt(eb2)),
-                           float(np.sqrt(ea2)), cr, r.method)
+                           float(np.sqrt(ea2)), cr, r.method,
+                           cr_requested=float(r.scfg.cr))
         return w_new, None, st
     cl = comp.compress(w.T.astype(jnp.float32),
                        LinearStats(norms=an, hessian=hz))
@@ -233,7 +336,8 @@ def _compress_leaf(layer: int, pth: str, w: Array, an: Optional[Array],
         from repro.core.packed_model import variant_of
         variant = variant_of(cl.dec, r.scfg.pattern) or ""
     return w_new, cl.dec, CompressStats(layer, pth, err_b, err_a, cr,
-                                        r.method, variant)
+                                        r.method, variant,
+                                        cr_requested=float(r.scfg.cr))
 
 
 def compress_model(cfg: ArchConfig, params: dict, calib,
@@ -242,7 +346,8 @@ def compress_model(cfg: ArchConfig, params: dict, calib,
                    plan=None,
                    collect_hessian: bool = False,
                    progress: Optional[Callable[[str], None]] = None,
-                   keep_decompositions: bool = False):
+                   keep_decompositions: bool = False,
+                   stats: Optional[ModelTapStats] = None):
     """Run the layer-wise protocol. Returns (new params, stats[, decs]).
 
     ``calib`` is an (N, S) int32 array (or (N, S, D) embeds for
@@ -255,21 +360,40 @@ def compress_model(cfg: ArchConfig, params: dict, calib,
     (or when ``collect_hessian`` forces it). ``keep_decompositions``
     additionally returns {(layer, path): dec} for
     core.packed_model.pack_plan_decs (kernel-served packed weights;
-    pruning-only methods contribute sparse-only decompositions)."""
+    pruning-only methods contribute sparse-only decompositions).
+
+    ``stats`` (a ``ModelTapStats`` from ``collect_model_stats``)
+    compresses from precollected statistics instead: no calibration
+    forwards run at all (``calib`` may be None) and error propagation
+    is skipped — the statistics describe the uncompressed model. A plan
+    with ``@auto`` rules is first routed through the budget allocator
+    (``core.allocator.allocate_plan``), which itself collects ``stats``
+    when not given — the whole allocate+compress flow then costs
+    exactly one calibration pass."""
     plan = (plan_lib.CompressionPlan.parse(plan, base=scfg)
             if plan is not None else plan_lib.plan_for_method(method, scfg))
-    spec = (calib if isinstance(calib, plan_lib.CalibrationSpec)
-            else plan_lib.CalibrationSpec(np.asarray(calib)))
+    if plan.wants_allocation:
+        from repro.core import allocator as allocator_lib
+        allocation = allocator_lib.allocate_plan(
+            cfg, params, calib, plan=plan, stats=stats, progress=progress)
+        plan, stats = allocation.plan, allocation.stats
+    precollected = stats is not None
 
-    stats: List[CompressStats] = []
+    out_stats: List[CompressStats] = []
     decs: Dict[Tuple[int, str], object] = {}
     params = dict(params)   # top-level copy: shared_attn swapped in place
     chunks: List[Array] = []
     positions: List[Array] = []
-    for t in spec.batches():
-        h = lm.embed_inputs(cfg, params, jnp.asarray(t))
-        chunks.append(h)
-        positions.append(positions_for(cfg, h.shape[0], h.shape[1]))
+    if not precollected:
+        if calib is None:
+            raise ValueError("compress_model needs calibration data "
+                             "(or precollected stats=)")
+        spec = (calib if isinstance(calib, plan_lib.CalibrationSpec)
+                else plan_lib.CalibrationSpec(np.asarray(calib)))
+        for t in spec.batches():
+            h = lm.embed_inputs(cfg, params, jnp.asarray(t))
+            chunks.append(h)
+            positions.append(positions_for(cfg, h.shape[0], h.shape[1]))
     new_layers = jax.tree.map(lambda a: a, params["layers"])  # shallow copy
     shared_pending = bool(cfg.family == "hybrid" and cfg.attn_every
                           and "shared_attn" in params)
@@ -281,12 +405,18 @@ def compress_model(cfg: ArchConfig, params: dict, calib,
                       and l % cfg.attn_every == cfg.attn_every - 1)
         tap_paths = paths + (shared_linear_paths(cfg) if shared_now else [])
         resolved = {p: plan.resolve(l, p) for p in tap_paths}
-        hess_names = {p for p, r in resolved.items()
-                      if r is not None and "hessian" in r.needs}
-        if collect_hessian:
-            hess_names = set(tap_paths)
-        acts, hess = _capture_layer(cfg, params, lp, l, chunks, positions,
-                                    tap_paths, hess_names)
+        if precollected:
+            acts = {p: stats.norms[(l, p)] for p in tap_paths
+                    if (l, p) in stats.norms}
+            hess = {p: stats.hessians[(l, p)] for p in tap_paths
+                    if (l, p) in stats.hessians}
+        else:
+            hess_names = {p for p, r in resolved.items()
+                          if r is not None and "hessian" in r.needs}
+            if collect_hessian:
+                hess_names = set(tap_paths)
+            acts, hess = _capture_layer(cfg, params, lp, l, chunks,
+                                        positions, tap_paths, hess_names)
 
         for pth in paths:
             r = resolved[pth]
@@ -297,7 +427,7 @@ def compress_model(cfg: ArchConfig, params: dict, calib,
                                             hess.get(pth), r)
             if keep_decompositions and dec is not None:
                 decs[(l, pth)] = dec
-            stats.append(st)
+            out_stats.append(st)
             _set(lp, pth, w_new)
 
         if shared_now:
@@ -311,7 +441,7 @@ def compress_model(cfg: ArchConfig, params: dict, calib,
                     continue
                 w_new, _, st = _compress_leaf(l, pth, w, acts.get(pth),
                                               hess.get(pth), r)
-                stats.append(st)
+                out_stats.append(st)
                 _set(sp, sub, w_new)
                 changed = True
             if changed:
@@ -330,5 +460,5 @@ def compress_model(cfg: ArchConfig, params: dict, calib,
     out = dict(params)
     out["layers"] = new_layers
     if keep_decompositions:
-        return out, stats, decs
-    return out, stats
+        return out, out_stats, decs
+    return out, out_stats

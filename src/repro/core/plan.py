@@ -23,10 +23,27 @@ loose keys are per-rule options)::
 ``@/path/to/plan.json`` loads the JSON from a file. Layer ranges:
 ``"2"``, ``"0-3"``, ``"5-"`` (open end), ``"-2"``, comma-separated
 unions. Option values are JSON literals where possible (``cr=0.4`` →
-float), bare strings otherwise (``pattern=2:4``). Options naming
-``SLaBConfig`` fields override the plan's base config; anything else is
-forwarded to the compressor's constructor (e.g. ``alt_iters`` for
-``hassle``).
+float), bare strings otherwise (``pattern=2:4``); a bare word
+(``auto``) is a True flag. Options naming ``SLaBConfig`` fields
+override the plan's base config; anything else is forwarded to the
+compressor's constructor (e.g. ``alt_iters`` for ``hassle``).
+
+**Auto-allocated CRs** — a rule whose options carry the ``auto`` flag
+leaves its ``cr`` to the sensitivity-driven budget allocator
+(``core.allocator``); plan-level allocator options ride as bare
+``key=value`` segments (keys: ``budget`` / ``floor`` / ``ceiling`` /
+``candidates`` / ``granularity``)::
+
+    *=slab@auto; budget=0.5
+    attn.*=sparsegpt; *=slab@auto,iters=4; budget=0.6; ceiling=0.9
+
+Such a plan cannot be resolved directly (``resolve`` raises); the
+pipeline routes it through ``core.allocator.allocate_plan`` which
+returns a concrete plan with per-(layer, path) ``cr`` rules.
+
+Plans round-trip: ``parse(plan.to_dsl())``, ``parse(plan.to_json())``
+and ``parse(repr(plan))`` all reproduce an equal plan (string option
+values must not contain ``,``/``;``, which the DSL reserves).
 
 ``CalibrationSpec`` rides along: it wraps the calibration token array
 with a streaming chunk size, so the pipeline can drive ``TapCapture``'s
@@ -48,6 +65,9 @@ from repro.core.slab import SLaBConfig
 
 _SKIP_METHODS = ("skip", "none")
 _SCFG_FIELDS = {f.name for f in dataclasses.fields(SLaBConfig)}
+# plan-level allocator options: bare "key=value" DSL segments / loose
+# JSON keys consumed by core.allocator.allocate_plan
+_AUTO_KEYS = ("budget", "floor", "ceiling", "candidates", "granularity")
 
 
 @functools.lru_cache(maxsize=256)
@@ -99,6 +119,15 @@ class PlanRule:
     layers: Union[str, int, Sequence[int], None] = None
     options: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
+    def __post_init__(self):
+        # normalize int / int-list layer specs to the DSL string form
+        # so equality and to_dsl/repr round-trips hold for every
+        # construction route (5 == parse("5/...") layers)
+        if isinstance(self.layers, int):
+            self.layers = str(self.layers)
+        elif isinstance(self.layers, (list, tuple)):
+            self.layers = ",".join(str(x) for x in self.layers)
+
     def matches(self, layer: int, path: str) -> bool:
         return (fnmatch.fnmatchcase(path, self.match)
                 and _layers_match(self.layers, layer))
@@ -124,20 +153,59 @@ class CompressionPlan:
     """Ordered rules; ``resolve`` is first-match-wins."""
 
     def __init__(self, rules: Sequence[PlanRule],
-                 base: SLaBConfig = SLaBConfig()):
+                 base: SLaBConfig = SLaBConfig(),
+                 auto_options: Optional[Dict[str, Any]] = None):
         self.rules = list(rules)
         self.base = base
+        self.auto_options = dict(auto_options or {})
         self._built: Dict[int, ResolvedCompression] = {}
 
-    def resolve(self, layer: int, path: str
+    @property
+    def is_auto(self) -> bool:
+        """True while any rule still needs the budget allocator to pin
+        its CR (the ``@auto`` flag)."""
+        return any(r.options.get("auto") for r in self.rules)
+
+    @property
+    def wants_allocation(self) -> bool:
+        """True when the pipeline should route this plan through the
+        budget allocator: any ``@auto`` rule, or a plan-level
+        ``budget=`` with at least one allocatable rule (non-skip, no
+        explicit ``cr=`` pin). The latter keeps ``'*=slab; budget=0.5'``
+        honest — a budget segment is never silently dropped — while
+        allocator-emitted plans (every rule pinned by ``cr=``) stay
+        concrete."""
+        if self.is_auto:
+            return True
+        if self.auto_options.get("budget") is None:
+            return False
+        return any(r.method not in _SKIP_METHODS and "cr" not in r.options
+                   for r in self.rules)
+
+    def matching_rule(self, layer: int, path: str) -> Optional[PlanRule]:
+        """The first rule matching (layer, path), skip rules included."""
+        for rule in self.rules:
+            if rule.matches(layer, path):
+                return rule
+        return None
+
+    def resolve(self, layer: int, path: str, allow_auto: bool = False
                 ) -> Optional[ResolvedCompression]:
         """Compressor for (layer, path); None = leave dense (an explicit
-        ``skip`` rule or no matching rule at all)."""
+        ``skip`` rule or no matching rule at all). ``allow_auto`` builds
+        ``@auto`` rules at the base config's CR (probe-only use — the
+        allocator reads ``needs``/``keep_fraction_for`` this way)."""
         for i, rule in enumerate(self.rules):
             if not rule.matches(layer, path):
                 continue
             if rule.method in _SKIP_METHODS:
                 return None
+            if rule.options.get("auto") and not allow_auto:
+                raise ValueError(
+                    f"plan rule {rule.match!r} is @auto: its CR is not "
+                    f"allocated yet — run core.allocator.allocate_plan "
+                    f"(or give the plan a 'budget=' segment and let the "
+                    f"pipeline allocate)")
             if i not in self._built:
                 self._built[i] = self._build(rule)
             return self._built[i]
@@ -146,21 +214,50 @@ class CompressionPlan:
     def _build(self, rule: PlanRule) -> ResolvedCompression:
         over = {k: v for k, v in rule.options.items() if k in _SCFG_FIELDS}
         extra = {k: v for k, v in rule.options.items()
-                 if k not in _SCFG_FIELDS}
+                 if k not in _SCFG_FIELDS and k != "auto"}
         if isinstance(over.get("group"), list):
             over["group"] = tuple(over["group"])
         scfg = dataclasses.replace(self.base, **over)
         return ResolvedCompression(
             rule.method, compressor_lib.get(rule.method, scfg, **extra))
 
+    # -- serialization (round-trips through parse) --------------------
+
+    def to_dsl(self) -> str:
+        """The inline-DSL form; ``parse(plan.to_dsl())`` == ``plan``."""
+        segs = [f"{k}={_fmt_opt(v)}" for k, v in self.auto_options.items()]
+        segs += [_rule_to_dsl(r) for r in self.rules]
+        return "; ".join(segs)
+
+    def to_json(self) -> str:
+        """The JSON-dict form; ``parse(plan.to_json())`` == ``plan``."""
+        obj: Dict[str, Any] = {}
+        bover = {f.name: getattr(self.base, f.name)
+                 for f in dataclasses.fields(SLaBConfig)
+                 if getattr(self.base, f.name) != f.default}
+        if bover:
+            obj["base"] = {k: list(v) if isinstance(v, tuple) else v
+                           for k, v in bover.items()}
+        obj.update(self.auto_options)
+        rules = []
+        for r in self.rules:
+            d: Dict[str, Any] = {"match": r.match, "method": r.method}
+            if r.layers is not None:
+                d["layers"] = r.layers         # normalized str form
+            if r.options:
+                d["options"] = dict(r.options)
+            rules.append(d)
+        obj["rules"] = rules
+        return json.dumps(obj)
+
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, CompressionPlan)
+                and self.rules == other.rules
+                and self.base == other.base
+                and self.auto_options == other.auto_options)
+
     def __repr__(self) -> str:
-        rs = "; ".join(
-            (f"{r.layers}/" if r.layers is not None else "")
-            + f"{r.match}={r.method}"
-            + ("@" + ",".join(f"{k}={v}" for k, v in r.options.items())
-               if r.options else "")
-            for r in self.rules)
-        return f"CompressionPlan({rs})"
+        return f"CompressionPlan({self.to_dsl()})"
 
     # -- parsing -----------------------------------------------------
 
@@ -171,8 +268,11 @@ class CompressionPlan:
             return spec
         if isinstance(spec, PlanRule):
             return cls([spec], base)
+        auto_options: Dict[str, Any] = {}
         if isinstance(spec, str):
             s = spec.strip()
+            if s.startswith("CompressionPlan(") and s.endswith(")"):
+                s = s[len("CompressionPlan("):-1].strip()  # repr round-trip
             if s.startswith("@"):
                 with open(s[1:]) as f:
                     spec = json.load(f)
@@ -186,13 +286,27 @@ class CompressionPlan:
                         parsed = json.loads(s)
                     except json.JSONDecodeError:
                         parsed = None
-                spec = (parsed if parsed is not None
-                        else [_parse_inline_rule(r)
-                              for r in s.split(";") if r.strip()])
+                if parsed is not None:
+                    spec = parsed
+                else:
+                    rules: List[PlanRule] = []
+                    for seg in s.split(";"):
+                        seg = seg.strip()
+                        if not seg:
+                            continue
+                        k, eq, v = seg.partition("=")
+                        if eq and k.strip() in _AUTO_KEYS and "/" not in k:
+                            auto_options[k.strip()] = _coerce(v.strip())
+                        else:
+                            rules.append(_parse_inline_rule(seg))
+                    spec = rules
         if isinstance(spec, dict):
             if "method" in spec:               # a bare single-rule object
                 spec = [spec]
             else:
+                spec = dict(spec)
+                for k in [k for k in spec if k in _AUTO_KEYS]:
+                    auto_options[k] = spec.pop(k)
                 bover = {k: v for k, v in spec.get("base", {}).items()
                          if k in _SCFG_FIELDS}
                 if isinstance(bover.get("group"), list):
@@ -207,7 +321,7 @@ class CompressionPlan:
                     "CompressionPlan spec resolved to zero rules — a "
                     "plan that compresses nothing is almost certainly a "
                     "spec mistake (use '*=skip' to skip everything)")
-            return cls(rules, base)
+            return cls(rules, base, auto_options)
         raise TypeError(f"cannot parse a CompressionPlan from "
                         f"{type(spec).__name__}")
 
@@ -248,11 +362,30 @@ def _parse_inline_rule(txt: str) -> PlanRule:
     method, _, opts = rhs.partition("@")
     options: Dict[str, Any] = {}
     for kv in filter(None, (p.strip() for p in _split_top_level(opts, ","))):
-        if "=" not in kv:
-            raise ValueError(f"bad option {kv!r} in plan rule {txt!r}")
-        k, v = kv.split("=", 1)
-        options[k.strip()] = _coerce(v.strip())
+        if "=" in kv:
+            k, v = kv.split("=", 1)
+            options[k.strip()] = _coerce(v.strip())
+        elif kv == "auto":                     # the only bare flag —
+            options[kv] = True                 # anything else is a typo
+        else:
+            raise ValueError(f"bad option {kv!r} in plan rule {txt!r} "
+                             f"(expected k=v; the only bare flag is "
+                             f"'auto')")
     return PlanRule(match.strip(), method.strip(), layers, options)
+
+
+def _fmt_opt(v: Any) -> str:
+    """Option value in DSL form: bare strings stay bare, everything else
+    is a JSON literal (so ``_coerce`` recovers the same value)."""
+    return v if isinstance(v, str) else json.dumps(v)
+
+
+def _rule_to_dsl(r: PlanRule) -> str:
+    layers = f"{r.layers}/" if r.layers is not None else ""
+    opts = ",".join(k if (v is True and k == "auto")
+                    else f"{k}={_fmt_opt(v)}"
+                    for k, v in r.options.items())
+    return f"{layers}{r.match}={r.method}" + (f"@{opts}" if opts else "")
 
 
 def _rule_from_dict(d: dict) -> PlanRule:

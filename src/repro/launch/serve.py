@@ -8,15 +8,21 @@ compressed weights.
   python -m repro.launch.serve --arch deepseek_moe_16b \
       --plan 'attn.*=sparsegpt; moe.shared.*=slab@cr=0.4; *=slab'
 
+  # sensitivity-driven per-layer CRs at a 0.5 global budget (one
+  # calibration pass; equivalent: --plan '*=slab@auto; budget=0.5'):
+  python -m repro.launch.serve --arch llama2_7b --budget 0.5
+
 Pipeline: load/init params -> (optional) layer-wise compression driven
 by a CompressionPlan with calibration data -> prefill the prompt batch
 -> greedy decode. ``--compress <method>`` stays as sugar for the
 single-rule plan ``*=<method>``; ``--plan`` takes anything
-``CompressionPlan.parse`` accepts and wins when both are given. The
-compressed weights can be served either as dense-equivalent swaps (XLA
-path) or through the fused Pallas kernel (--kernel, interpret-mode on
-CPU; compiled Mosaic on TPU). ``--no-smoke`` reaches the full-size
-configs.
+``CompressionPlan.parse`` accepts and wins when both are given;
+``--budget`` routes either through ``core.allocator`` (water-filled
+per-layer CRs from one calibration pass) and prints the per-layer CR
+table. The compressed weights can be served either as dense-equivalent
+swaps (XLA path) or through the fused Pallas kernel (--kernel,
+interpret-mode on CPU; compiled Mosaic on TPU). ``--no-smoke`` reaches
+the full-size configs.
 """
 from __future__ import annotations
 
@@ -73,6 +79,11 @@ def main():
                     help="CompressionPlan spec: inline DSL "
                          "('attn.*=sparsegpt; *=slab@cr=0.4'), JSON, or "
                          "@/path/to/plan.json; overrides --compress")
+    ap.add_argument("--budget", type=float, default=None,
+                    help="global CR budget: allocate per-layer CRs by "
+                         "sensitivity water-filling (core.allocator) "
+                         "over --plan/--compress, from one calibration "
+                         "pass")
     ap.add_argument("--packed", action="store_true",
                     help="serve through the fused Pallas kernels (SLaB "
                          "on-HBM format; interpret mode on CPU)")
@@ -97,6 +108,9 @@ def main():
     scfg = SLaBConfig(cr=args.cr, pattern=args.pattern, iters=args.iters)
     plan = (CompressionPlan.parse(args.plan, base=scfg)
             if args.plan else None)
+    if args.budget is not None and plan is None and args.compress == "none":
+        ap.error("--budget needs something to allocate: give --plan or "
+                 "a --compress method")
     if plan is not None or args.compress != "none":
         calib = calibration_batch(cfg.vocab, seed=args.seed,
                                   n_seq=args.calib_seqs,
@@ -105,15 +119,38 @@ def main():
             from repro.core.plan import CalibrationSpec
             calib = CalibrationSpec(calib, batch_size=args.calib_batch)
         t0 = time.monotonic()
+        stats_pre = None
+        if args.budget is not None:
+            from repro.core.allocator import allocate_plan
+            alloc = allocate_plan(
+                cfg, params, calib, budget=args.budget,
+                template=(plan if plan is not None
+                          else f"*={args.compress}"), base=scfg)
+            plan, stats_pre = alloc.plan, alloc.stats
+            print(f"allocated {len(alloc.crs)} CR groups at budget "
+                  f"{alloc.budget:.3f} (achieved {alloc.achieved:.3f}, "
+                  f"one calibration pass, "
+                  f"{alloc.stats.n_forwards} layer forwards)")
         out = compress_model(cfg, params, calib, method=args.compress,
                              scfg=scfg, plan=plan,
-                             keep_decompositions=args.packed)
+                             keep_decompositions=args.packed,
+                             stats=stats_pre)
         params, stats = out[0], out[1]
         by_method = sorted({s.method for s in stats})
         cr_meas = float(np.mean([s.cr for s in stats])) if stats else 0.0
         print(f"compressed {len(stats)} linears "
               f"({'/'.join(by_method)}) at measured CR={cr_meas:.3f} "
               f"in {time.monotonic() - t0:.1f}s")
+        if args.plan is not None or args.budget is not None:
+            # per-layer CR table: allocator / plan decisions stay
+            # observable without rerunning calibration
+            print(f"{'layer':>5}  {'path':<20} {'method':<10} "
+                  f"{'cr_req':>7} {'cr':>7} {'err_before':>11} "
+                  f"{'err_after':>10}")
+            for s in stats:
+                print(f"{s.layer:>5}  {s.name:<20} {s.method:<10} "
+                      f"{s.cr_requested:>7.3f} {s.cr:>7.3f} "
+                      f"{s.err_before:>11.4g} {s.err_after:>10.4g}")
         if args.packed:
             from repro.core.packed_model import pack_plan_decs
             eff_plan = (plan if plan is not None

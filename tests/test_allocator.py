@@ -1,0 +1,405 @@
+"""Sensitivity-driven CR allocator: water-filling solver on
+hand-checkable frontiers, budget feasibility, floor/ceiling clamps,
+shared-block grouping, probe exactness for score-based pruners, the
+one-calibration-pass guarantee, and the acceptance property (allocated
+summed err_after <= uniform at equal measured global CR)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import allocator
+from repro.core.allocator import (Frontier, allocate_plan,
+                                  measured_global_cr, waterfill)
+from repro.core.baselines import wanda_prune
+from repro.core.pipeline import (collect_model_stats, compress_model,
+                                 shared_linear_paths)
+from repro.core.plan import CompressionPlan
+from repro.core.scores import weighted_fro_error
+from repro.data import calibration_batch
+from repro.models import lm
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = configs.get("llama2_7b", smoke=True).with_(dtype=jnp.float32)
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _global_cr(cfg, params, rows):
+    return measured_global_cr(params, rows)
+
+
+# ------------------------------------------------------------------
+# Water-filling solver (deterministic hand-checkable fixtures)
+# ------------------------------------------------------------------
+
+def _fr(key, size, crs, errs):
+    return Frontier(key, size, np.asarray(crs, float),
+                    np.asarray(errs, float))
+
+
+GRID = [0.2, 0.4, 0.6, 0.8]
+
+
+def test_waterfill_hand_checked_three_layer_fixture():
+    """Equal sizes, budget 0.6 = six 0.2-steps above the floor. The six
+    cheapest marginal steps are c,c,c (0.5 each), a,a (1 each), b (5):
+    a->0.6, b->0.4, c->0.8; mean exactly 0.6."""
+    fronts = [_fr("a", 100, GRID, [0, 1, 2, 10]),
+              _fr("b", 100, GRID, [0, 5, 10, 20]),
+              _fr("c", 100, GRID, [0, 0.5, 1.0, 1.5])]
+    got = waterfill(fronts, budget=0.6)
+    assert got == {"a": 0.6, "b": 0.4, "c": 0.8}
+
+
+def test_waterfill_sensitive_layer_protected():
+    """A layer whose error explodes keeps the lowest CR; the
+    insensitive layers absorb the budget."""
+    fronts = [_fr("sensitive", 10, GRID, [0, 100, 200, 300]),
+              _fr("easy1", 10, GRID, [0, 0.1, 0.2, 0.3]),
+              _fr("easy2", 10, GRID, [0, 0.1, 0.2, 0.3])]
+    got = waterfill(fronts, budget=0.6)
+    assert got["sensitive"] == 0.2
+    assert got["easy1"] == 0.8 and got["easy2"] == 0.8
+
+
+def test_waterfill_budget_below_floor_sum_is_trivially_met():
+    fronts = [_fr("a", 1, GRID, [0, 1, 2, 3])]
+    assert waterfill(fronts, budget=0.1) == {"a": 0.2}
+
+
+def test_waterfill_infeasible_budget_raises():
+    fronts = [_fr("a", 1, GRID, [0, 1, 2, 3]),
+              _fr("b", 1, GRID, [0, 1, 2, 3])]
+    with pytest.raises(ValueError, match="infeasible"):
+        waterfill(fronts, budget=0.9)
+    with pytest.raises(ValueError, match="infeasible"):
+        waterfill(fronts, budget=0.7, ceiling=0.6)
+
+
+def test_waterfill_floor_ceiling_clamps():
+    fronts = [_fr("a", 1, GRID, [0, 1, 2, 10]),
+              _fr("b", 1, GRID, [0, 5, 10, 20])]
+    got = waterfill(fronts, budget=0.5, floor=0.4, ceiling=0.6)
+    assert set(got.values()) <= {0.4, 0.6}
+    assert sum(got.values()) / 2 >= 0.5
+    with pytest.raises(ValueError, match="no admissible"):
+        waterfill(fronts, budget=0.5, floor=0.85)
+
+
+def test_waterfill_size_weighting():
+    """Budget is weighted by parameter count: a huge cheap group meets
+    the budget almost alone."""
+    fronts = [_fr("big", 9000, GRID, [0, 0.1, 0.2, 0.3]),
+              _fr("tiny", 1000, GRID, [0, 50, 100, 200])]
+    got = waterfill(fronts, budget=0.6)
+    assert got["big"] == 0.8 and got["tiny"] == 0.2
+    # 0.9*0.8 + 0.1*0.2 = 0.74 >= 0.6 but no single step less
+    fronts2 = [_fr("big", 9000, GRID, [0, 0.1, 0.2, 0.3]),
+               _fr("tiny", 1000, GRID, [0, 50, 100, 200])]
+    assert waterfill(fronts2, budget=0.56)["big"] == 0.6
+
+
+def test_waterfill_never_worse_than_uniform():
+    """Predicted error of the solution is <= the uniform-at-budget
+    allocation whenever that allocation is on the grid."""
+    rng = np.random.default_rng(3)
+    for _ in range(20):
+        fronts = [_fr(f"g{i}", int(rng.integers(1, 100)) * 10, GRID,
+                      np.cumsum(rng.gamma(1.0, 5.0, size=len(GRID))))
+                  for i in range(4)]
+        got = waterfill(fronts, budget=0.6)
+        pred = uni = 0.0
+        for f in fronts:
+            pred += float(f.errs[list(f.crs).index(got[f.key])])
+            uni += float(f.errs[list(f.crs).index(0.6)])
+        assert pred <= uni + 1e-12
+
+
+# ------------------------------------------------------------------
+# Sensitivity probe
+# ------------------------------------------------------------------
+
+def test_probe_curve_matches_actual_wanda_error():
+    """For score-based pruners the frontier is EXACT: the predicted
+    err_after equals the measured activation-weighted error of the
+    pruned matrix at every candidate CR."""
+    from repro.core import compressor as compressor_lib
+    rng = np.random.default_rng(0)
+    w_model = jnp.asarray(rng.normal(size=(96, 64)), jnp.float32)  # (D_in, D_out)
+    norms = jnp.asarray(np.abs(rng.normal(size=(96,))) + 0.1, jnp.float32)
+    comp = compressor_lib.get("wanda")
+    curve, err_b = allocator._leaf_curve(w_model, norms, comp,
+                                         [0.3, 0.5, 0.7])
+    w_paper = w_model.T
+    assert err_b == pytest.approx(
+        float(weighted_fro_error(w_paper, jnp.zeros_like(w_paper), norms)),
+        rel=1e-5)
+    for cr, pred in curve.items():
+        pruned = wanda_prune(w_paper, norms, 1.0 - cr)
+        want = float(weighted_fro_error(w_paper, pruned, norms))
+        assert pred == pytest.approx(want, rel=1e-5, abs=1e-6), cr
+
+
+def test_probe_respects_method_budget_model():
+    """slab's keep fraction pays for the binary + low-rank terms, so at
+    the same CR its probe prunes more mass than wanda's."""
+    from repro.core import compressor as compressor_lib
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    n = jnp.ones((64,), jnp.float32)
+    cw, _ = allocator._leaf_curve(w, n, compressor_lib.get("wanda"), [0.5])
+    cs, _ = allocator._leaf_curve(w, n, compressor_lib.get("slab"), [0.5])
+    assert cs[0.5] > cw[0.5]
+    # infeasible candidates are absent instead of raising
+    chigh, _ = allocator._leaf_curve(
+        w, n, compressor_lib.get("slab"), [0.5, 0.99])
+    assert 0.99 not in chigh and 0.5 in chigh
+
+
+# ------------------------------------------------------------------
+# allocate_plan end-to-end
+# ------------------------------------------------------------------
+
+def test_allocated_beats_uniform_at_equal_cr(small_model):
+    """THE acceptance property: from one shared set of tapped stats,
+    the water-filled plan's summed err_after is <= the uniform plan's
+    at equal (±1%) measured global CR."""
+    cfg, params = small_model
+    cal = calibration_batch(cfg.vocab, n_seq=4, seq_len=32)
+    stats = collect_model_stats(cfg, params, cal, plan="*=wanda")
+    _, urows = compress_model(cfg, params, None, plan="*=wanda@cr=0.6",
+                              stats=stats)
+    alloc = allocate_plan(cfg, params, budget=0.6, template="*=wanda",
+                          stats=stats)
+    _, arows = compress_model(cfg, params, None, plan=alloc.plan,
+                              stats=alloc.stats)
+    err_u = sum(s.err_after for s in urows)
+    err_a = sum(s.err_after for s in arows)
+    assert err_a <= err_u * (1 + 1e-6), (err_a, err_u)
+    assert abs(_global_cr(cfg, params, arows)
+               - _global_cr(cfg, params, urows)) <= 0.01
+    # the probe is exact for wanda: predicted == measured
+    assert alloc.predicted_err == pytest.approx(err_a, rel=1e-4)
+    # and the allocation is non-trivial (actually reallocates)
+    assert len(set(alloc.crs.values())) > 1
+
+
+def test_auto_plan_compresses_in_one_calibration_pass(small_model,
+                                                      monkeypatch):
+    """`*=wanda@auto; budget=...` through compress_model runs EXACTLY
+    n_layers * n_chunks layer forwards: the probe pass is the only
+    calibration traffic, and the compression stage reuses its stats."""
+    cfg, params = small_model
+    cal = calibration_batch(cfg.vocab, n_seq=2, seq_len=16)
+    calls = {"n": 0}
+    orig = lm._layer_fwd
+
+    def counted(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(lm, "_layer_fwd", counted)
+    new, rows = compress_model(cfg, params, cal,
+                               plan="*=wanda@auto; budget=0.6")
+    assert calls["n"] == cfg.n_layers * 1
+    assert len(rows) > 0
+    assert all(s.method == "wanda" for s in rows)
+    # requested CR records the allocator's decision; measured tracks it
+    for s in rows:
+        assert s.cr_requested > 0
+        assert abs(s.cr - s.cr_requested) < 0.05
+    t = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    logits, _ = lm.forward(cfg, new, t)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+
+def test_auto_plan_without_allocation_raises(small_model):
+    plan = CompressionPlan.parse("*=slab@auto; budget=0.5")
+    assert plan.is_auto
+    with pytest.raises(ValueError, match="auto"):
+        plan.resolve(0, "attn.wq")
+    # missing budget is a loud error too
+    cfg, params = small_model
+    cal = calibration_batch(cfg.vocab, n_seq=2, seq_len=16)
+    with pytest.raises(ValueError, match="budget"):
+        compress_model(cfg, params, cal, plan="*=slab@auto")
+
+
+def test_allocate_infeasible_budget_raises(small_model):
+    cfg, params = small_model
+    cal = calibration_batch(cfg.vocab, n_seq=2, seq_len=16)
+    with pytest.raises(ValueError, match="infeasible"):
+        allocate_plan(cfg, params, cal, budget=0.9, template="*=wanda",
+                      ceiling=0.5)
+
+
+def test_emitted_plan_is_concrete_and_preserves_pinned_rules(small_model):
+    """@auto rules become exact per-(layer, path) cr rules; pinned and
+    skip rules survive behind them; the plan round-trips through its
+    DSL with identical resolution."""
+    cfg, params = small_model
+    cal = calibration_batch(cfg.vocab, n_seq=2, seq_len=16)
+    alloc = allocate_plan(
+        cfg, params, cal, budget=0.5,
+        plan="attn.wq=wanda@cr=0.3; mlp.w_up=skip; *=sola@auto,softness=0.25")
+    plan = alloc.plan
+    assert not plan.is_auto
+    # pinned rule kept its own cr, skip still skips
+    assert plan.resolve(0, "attn.wq").scfg.cr == 0.3
+    assert plan.resolve(0, "mlp.w_up") is None
+    # allocated rules are concrete, carry non-auto options, sit in-budget
+    r = plan.resolve(1, "mlp.w_down")
+    assert r.method == "sola" and r.compressor.softness == 0.25
+    assert 0.0 < r.scfg.cr < 1.0
+    # pinned/skipped linears are excluded from the allocation
+    allocated_paths = {row["path"] for row in alloc.rows}
+    assert "attn.wq" not in allocated_paths
+    assert "mlp.w_up" not in allocated_paths
+    # DSL round-trip resolves identically
+    re = CompressionPlan.parse(plan.to_dsl())
+    for l in range(cfg.n_layers):
+        for p in ("attn.wq", "attn.wo", "mlp.w_up", "mlp.w_down"):
+            a, b = None, None
+            try:
+                a = plan.resolve(l, p)
+            except ValueError:
+                pass
+            try:
+                b = re.resolve(l, p)
+            except ValueError:
+                pass
+            assert (a is None) == (b is None)
+            if a is not None:
+                assert a.method == b.method and a.scfg == b.scfg
+
+
+def test_explicit_cr_rules_are_pinned_not_overridden(small_model):
+    """In an unflagged plan, a rule carrying an explicit cr= is a pin:
+    the allocator must not silently replace the user's choice."""
+    cfg, params = small_model
+    cal = calibration_batch(cfg.vocab, n_seq=2, seq_len=16)
+    alloc = allocate_plan(cfg, params, cal, budget=0.5,
+                          template="attn.wq=wanda@cr=0.2; *=wanda")
+    assert "attn.wq" not in {r["path"] for r in alloc.rows}
+    for l in range(cfg.n_layers):
+        assert alloc.plan.resolve(l, "attn.wq").scfg.cr == 0.2
+    _, rows = compress_model(cfg, params, None, plan=alloc.plan,
+                             stats=alloc.stats)
+    assert all(s.cr_requested == 0.2 for s in rows
+               if s.name == "attn.wq")
+
+
+def test_emitted_plan_roundtrips_with_full_equality(small_model):
+    """parse(to_dsl()) == plan holds for allocator-emitted plans too
+    (layer specs are emitted in the DSL's native string form)."""
+    cfg, params = small_model
+    cal = calibration_batch(cfg.vocab, n_seq=2, seq_len=16)
+    alloc = allocate_plan(cfg, params, cal, budget=0.5, template="*=wanda")
+    assert CompressionPlan.parse(alloc.plan.to_dsl()) == alloc.plan
+    assert CompressionPlan.parse(alloc.plan.to_json()) == alloc.plan
+    assert CompressionPlan.parse(repr(alloc.plan)) == alloc.plan
+
+
+def test_budget_segment_without_auto_flag_still_allocates(small_model,
+                                                          monkeypatch):
+    """'*=wanda; budget=0.6' (no @auto flag) must not silently drop the
+    budget: the pipeline routes it through the allocator, still in one
+    calibration pass. Emitted plans stay concrete (no re-allocation)."""
+    cfg, params = small_model
+    cal = calibration_batch(cfg.vocab, n_seq=2, seq_len=16)
+    plan = CompressionPlan.parse("*=wanda; budget=0.6")
+    assert not plan.is_auto and plan.wants_allocation
+    calls = {"n": 0}
+    orig = lm._layer_fwd
+
+    def counted(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(lm, "_layer_fwd", counted)
+    _, rows = compress_model(cfg, params, cal, plan=plan)
+    assert calls["n"] == cfg.n_layers
+    assert len({round(s.cr_requested, 2) for s in rows}) > 1
+    alloc = allocate_plan(cfg, params, cal, budget=0.6, template="*=wanda")
+    assert not alloc.plan.wants_allocation
+
+
+def test_malformed_bare_option_raises():
+    """Only 'auto' is a bare flag; a forgotten '=value' fails at parse
+    time instead of producing a True-valued hyper-parameter."""
+    with pytest.raises(ValueError, match="bad option"):
+        CompressionPlan.parse("*=slab@pattern")
+    with pytest.raises(ValueError, match="bad option"):
+        CompressionPlan.parse("*=wanda@cr0.5")
+
+
+def test_shared_block_gets_one_cr():
+    """Tied weights: every shared.* linear of the hybrid shared block
+    lands in ONE allocation group with one CR."""
+    cfg = configs.get("zamba2_7b", smoke=True).with_(dtype=jnp.float32)
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    cal = calibration_batch(cfg.vocab, n_seq=2, seq_len=16)
+    alloc = allocate_plan(cfg, params, cal, budget=0.5,
+                          plan="shared.*=wanda@auto; *=skip; budget=0.5")
+    assert set(alloc.crs) == {"shared"}
+    shared_rows = [r for r in alloc.rows if r["path"].startswith("shared.")]
+    assert {r["path"] for r in shared_rows} == set(shared_linear_paths(cfg))
+    assert len({r["cr"] for r in shared_rows}) == 1
+    # the emitted plan compresses exactly the shared block, once
+    new, rows = compress_model(cfg, params, None, plan=alloc.plan,
+                               stats=alloc.stats)
+    assert sorted(s.name for s in rows) == sorted(shared_linear_paths(cfg))
+    assert len({s.cr_requested for s in rows}) == 1
+
+
+def test_layer_granularity_one_cr_per_layer(small_model):
+    cfg, params = small_model
+    cal = calibration_batch(cfg.vocab, n_seq=2, seq_len=16)
+    alloc = allocate_plan(cfg, params, cal, budget=0.5, template="*=wanda",
+                          granularity="layer")
+    assert set(alloc.crs) == {f"L{l}" for l in range(cfg.n_layers)}
+    by_layer = {}
+    for row in alloc.rows:
+        by_layer.setdefault(row["layer"], set()).add(row["cr"])
+    assert all(len(v) == 1 for v in by_layer.values())
+
+
+@pytest.mark.parametrize("arch", ["mamba2_1_3b", "deepseek_moe_16b"])
+def test_allocator_other_families(arch):
+    """SSM and MoE families allocate (3-D expert leaves probe
+    per-expert) and hit the budget within a grid step."""
+    cfg = configs.get(arch, smoke=True).with_(dtype=jnp.float32)
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    cal = calibration_batch(cfg.vocab, n_seq=2, seq_len=16)
+    new, rows = compress_model(cfg, params, cal,
+                               plan="*=wanda@auto; budget=0.5")
+    assert len(rows) > 0
+    assert abs(_global_cr(cfg, params, rows) - 0.5) < 0.06
+    t = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    logits, _ = lm.forward(cfg, new, t)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+
+@pytest.mark.slow
+def test_allocated_slab_beats_uniform_end_to_end(small_model):
+    """Full SLaB through the @auto path on a larger calibration set:
+    the allocated plan still wins on summed err_after at equal (±1%)
+    measured CR, and the whole flow stays one calibration pass."""
+    cfg, params = small_model
+    cal = calibration_batch(cfg.vocab, n_seq=8, seq_len=64)
+    stats = collect_model_stats(cfg, params, cal, plan="*=slab")
+    _, urows = compress_model(cfg, params, None,
+                              plan="*=slab@cr=0.5,iters=4", stats=stats)
+    alloc = allocate_plan(cfg, params, budget=0.5,
+                          template="*=slab@iters=4", stats=stats)
+    _, arows = compress_model(cfg, params, None, plan=alloc.plan,
+                              stats=alloc.stats)
+    err_u = sum(s.err_after for s in urows)
+    err_a = sum(s.err_after for s in arows)
+    assert err_a <= err_u, (err_a, err_u)
+    assert abs(_global_cr(cfg, params, arows)
+               - _global_cr(cfg, params, urows)) <= 0.01

@@ -1,0 +1,148 @@
+"""Property-style round-trips for the plan DSL: parse → JSON → parse
+and parse → repr → parse equality across rule precedence, layer
+ranges, and @auto allocator options. The deterministic sweep always
+runs; the hypothesis versions exercise random compositions when
+hypothesis is installed and skip cleanly under the conftest stubs."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:        # property tests skip without hypothesis
+    from conftest import given, settings, strategies as st
+
+from repro.core.plan import CompressionPlan, _AUTO_KEYS
+from repro.core.slab import SLaBConfig
+
+SPECS = [
+    "*=slab",
+    "attn.*=sparsegpt; *=slab@cr=0.4,pattern=2:4",
+    "0-3/mlp.*=wanda@pattern=2:4; *=slab",
+    "mamba.out=skip; 2/attn.*=wanda; 5-/mlp.*=magnitude; "
+    "*=slab@group=[4,1]",
+    "-2/attn.wq=sola@softness=0.25; *=hassle@rank=2,alt_iters=1",
+    "0,2,7-/moe.shared.*=slab@cr=0.6; [am]*.out=skip; *=wanda",
+    "budget=0.5; *=slab@auto",
+    "budget=0.6; floor=0.1; ceiling=0.9; granularity=layer; "
+    "attn.*=skip; *=wanda@auto",
+    "candidates=[0.25,0.5,0.75]; 1-/mlp.*=slab@auto,iters=3; "
+    "*=sparsegpt@cr=0.5; budget=0.4",
+]
+
+PROBES = [(0, "attn.wq"), (1, "attn.wo"), (2, "mlp.w_up"),
+          (5, "mlp.w_down"), (3, "moe.shared.w_gate"), (7, "mamba.out")]
+
+
+def _resolution(plan):
+    """(method, scfg) per probe point, with @auto rules probed at the
+    base config (the resolution that must survive a round-trip)."""
+    out = []
+    for layer, path in PROBES:
+        r = plan.resolve(layer, path, allow_auto=True)
+        out.append(None if r is None else (r.method, r.scfg))
+    return out
+
+
+@pytest.mark.parametrize("spec", SPECS)
+def test_parse_json_parse_equality(spec):
+    plan = CompressionPlan.parse(spec)
+    again = CompressionPlan.parse(plan.to_json())
+    assert again == plan
+    assert _resolution(again) == _resolution(plan)
+
+
+@pytest.mark.parametrize("spec", SPECS)
+def test_parse_repr_parse_equality(spec):
+    plan = CompressionPlan.parse(spec)
+    again = CompressionPlan.parse(repr(plan))
+    assert again == plan
+    assert _resolution(again) == _resolution(plan)
+
+
+@pytest.mark.parametrize("spec", SPECS)
+def test_parse_dsl_parse_equality(spec):
+    plan = CompressionPlan.parse(spec)
+    again = CompressionPlan.parse(plan.to_dsl())
+    assert again == plan
+
+
+@pytest.mark.parametrize("spec", SPECS)
+def test_roundtrip_preserves_base_and_auto_options(spec):
+    base = SLaBConfig(cr=0.35, iters=3, group=(4, 1))
+    plan = CompressionPlan.parse(spec, base=base)
+    again = CompressionPlan.parse(plan.to_json())
+    assert again.base == base
+    assert again.auto_options == plan.auto_options
+    assert again.is_auto == plan.is_auto
+
+
+def test_int_and_list_layers_normalize_and_roundtrip():
+    """Python-constructed rules with int / int-list layers compare
+    equal to their DSL round-trip (layers normalize to the DSL string
+    form at construction)."""
+    from repro.core.plan import PlanRule
+    plan = CompressionPlan([PlanRule("attn.*", "slab", layers=5),
+                            PlanRule("mlp.*", "wanda", layers=[0, 2]),
+                            PlanRule("*", "slab")])
+    assert plan.rules[0].layers == "5"
+    assert plan.rules[1].layers == "0,2"
+    assert CompressionPlan.parse(plan.to_dsl()) == plan
+    assert CompressionPlan.parse(plan.to_json()) == plan
+    assert CompressionPlan.parse(repr(plan)) == plan
+    assert plan.resolve(5, "attn.wq").method == "slab"
+    assert plan.resolve(2, "mlp.w_up").method == "wanda"
+    assert plan.resolve(1, "mlp.w_up").method == "slab"
+
+
+def test_auto_flag_survives_all_routes():
+    plan = CompressionPlan.parse("budget=0.5; *=slab@auto,iters=2")
+    for route in (plan.to_dsl(), plan.to_json(), repr(plan)):
+        p = CompressionPlan.parse(route)
+        assert p.is_auto
+        assert p.auto_options == {"budget": 0.5}
+        assert p.rules[0].options == {"auto": True, "iters": 2}
+
+
+def test_double_roundtrip_is_stable():
+    """to_dsl is a fixed point after one parse (idempotent printing)."""
+    for spec in SPECS:
+        plan = CompressionPlan.parse(spec)
+        once = plan.to_dsl()
+        assert CompressionPlan.parse(once).to_dsl() == once
+        jonce = plan.to_json()
+        assert CompressionPlan.parse(jonce).to_json() == jonce
+
+
+@settings(max_examples=60, deadline=None)
+@given(spec=st.sampled_from(SPECS), budget=st.floats(0.05, 0.95),
+       swap=st.booleans())
+def test_property_composed_specs_roundtrip(spec, budget, swap):
+    """Random compositions: any base spec, extra allocator segments,
+    optional rule-order swap — every composition must round-trip
+    through both JSON and repr."""
+    composed = f"budget={budget}; {spec}"
+    plan = CompressionPlan.parse(composed)
+    if swap and len(plan.rules) > 1:
+        plan = CompressionPlan(list(reversed(plan.rules)), plan.base,
+                               plan.auto_options)
+    assert CompressionPlan.parse(plan.to_json()) == plan
+    assert CompressionPlan.parse(repr(plan)) == plan
+
+
+@settings(max_examples=60, deadline=None)
+@given(key=st.sampled_from(sorted(_AUTO_KEYS)),
+       layers=st.sampled_from([None, "2", "0-3", "5-", "-2", "0,2,4"]),
+       method=st.sampled_from(["slab", "wanda", "skip", "sparsegpt"]),
+       auto=st.booleans())
+def test_property_single_rule_roundtrip(key, layers, method, auto):
+    val = {"budget": 0.5, "floor": 0.1, "ceiling": 0.9,
+           "candidates": [0.2, 0.8], "granularity": "layer"}[key]
+    opts = "@auto" if auto and method != "skip" else ""
+    pre = f"{layers}/" if layers else ""
+    import json
+    spec = (f"{key}={json.dumps(val) if not isinstance(val, str) else val}"
+            f"; {pre}*={method}{opts}")
+    plan = CompressionPlan.parse(spec)
+    assert plan.auto_options == {key: val}
+    assert CompressionPlan.parse(plan.to_dsl()) == plan
+    assert CompressionPlan.parse(plan.to_json()) == plan
+    assert CompressionPlan.parse(repr(plan)) == plan
