@@ -126,6 +126,50 @@ def compress_and_eval(method: str, cr: float, pattern: Optional[str],
     return out
 
 
+def synthetic_pruned_packed(cfg, keep_of, skip=frozenset(), seed=0):
+    """Pack a model from synthetic magnitude-pruned sparse-only decs —
+    no calibration pipeline, so deep models build in milliseconds.
+    ``keep_of(l)`` sets the per-layer keep fraction: different keeps
+    give different realized ELL K_max, i.e. different packed
+    signatures, i.e. scan-segment boundaries. ``skip`` (layer, path)
+    pairs stay dense (partial coverage). Returns (dense_equivalent,
+    packed, PackReport). Shared by bench_packed_serve and
+    tests/test_segmented_scan.py."""
+    from repro.core.packed_model import pack_plan_decs
+    from repro.core.pipeline import _get, _set, linear_paths
+    from repro.core.plan import CompressionPlan
+    from repro.core.slab import SLaBDecomposition
+    from repro.core.sparsity import prune_mask
+    params, _ = lm.init(cfg, jax.random.PRNGKey(seed))
+    decs = {}
+    dense_c = jax.tree.map(lambda a: a, params)
+    for name in linear_paths(cfg):
+        leaf = _get(params["layers"], name)
+        if leaf is None or leaf.ndim != 3:
+            continue
+        new = []
+        for l in range(cfg.n_layers):
+            w = leaf[l].T
+            if (l, name) in skip:
+                new.append(leaf[l])
+                continue
+            w_s = jnp.where(prune_mask(jnp.abs(w), keep_of(l)), w, 0.0)
+            decs[(l, name)] = SLaBDecomposition(
+                w_s, jnp.zeros((w.shape[0], 0), jnp.float32),
+                jnp.zeros((w.shape[1], 0), jnp.float32),
+                jnp.zeros((0, 0), jnp.int8))
+            new.append(w_s.T)
+        _set(dense_c["layers"], name, jnp.stack(new))
+    packed, rep = pack_plan_decs(dense_c, decs, cfg.n_layers,
+                                 CompressionPlan.parse("*=wanda"))
+    return dense_c, packed, rep
+
+
+def per_layer_segments(n_layers: int):
+    """The degenerate per-layer segmentation — the old unrolled path."""
+    return tuple((l, l + 1) for l in range(n_layers))
+
+
 def emit(table: str, rows) -> None:
     os.makedirs("experiments/benchmarks", exist_ok=True)
     path = f"experiments/benchmarks/{table}.json"

@@ -10,9 +10,11 @@
 #                               # registry, plans, layer-wise pipeline,
 #                               # taps (mixed-method e2e stays @slow)
 #   scripts/tier1.sh packed     # packed-serving loop: variant-tagged
-#                               # formats, per-variant kernels,
-#                               # heterogeneous stacks, e2e packed
-#                               # forward/decode
+#                               # formats, per-variant kernels (incl.
+#                               # ELL gather-matmul), heterogeneous
+#                               # stacks, segmented-scan serving, e2e
+#                               # packed forward/decode (full-depth
+#                               # trace-count cases stay @slow)
 #   scripts/tier1.sh allocator  # budget-allocator loop: water-filling
 #                               # solver, @auto plans, plan DSL
 #                               # round-trips, cross-variant kernel
@@ -43,7 +45,8 @@ if [ "${1:-}" = "packed" ]; then
     shift
     exec python -m pytest -q -m "not slow" \
         tests/test_kernels.py tests/test_packed_serving.py \
-        tests/test_hetero_packing.py tests/test_variant_parity.py "$@"
+        tests/test_hetero_packing.py tests/test_variant_parity.py \
+        tests/test_ell_kernels.py tests/test_segmented_scan.py "$@"
 fi
 
 if [ "${1:-}" = "allocator" ]; then

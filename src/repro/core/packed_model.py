@@ -1,5 +1,5 @@
 """Packed-weight model serving: every compressed linear lives in an
-on-HBM packed format (N:M values+indices or dense-masked W_S, bit-packed
+on-HBM packed format (N:M values+indices, row-padded ELL, bit-packed
 W_B, rank-r u/v factors) and forwards through the fused Pallas kernels.
 
 ``PackedLinear`` is a **variant-tagged** registered pytree: the arrays
@@ -9,17 +9,27 @@ and a static ``variant`` tag picks the kernel at dispatch time:
   variant          terms                       kernel
   ---------------  --------------------------  ---------------------------
   slab-nm          N:M W_S + W_B + rank-r UV   ops.slab_nm_matmul
+  slab-ell         ELL W_S + W_B + rank-r UV   ops.slab_ell_matmul
   slab-dense       dense W_S + W_B + rank-r    ops.slab_matmul
   binlr            W_B + rank-r UV (no W_S)    ops.binlr
   lowrank-nm       N:M W_S + rank-r UV         ops.slab_nm_lr_matmul
+  lowrank-ell      ELL W_S + rank-r UV         ops.ell_lr_matmul
   lowrank-dense    dense W_S + rank-r UV       ops.slab_lr_matmul
   lowrank          rank-r UV only              (x @ V) @ Uᵀ (XLA; already
                                                minimal bytes)
   sparse-nm        N:M W_S only                ops.nm_matmul
+  sparse-ell       ELL W_S only                ops.ell_matmul
   sparse-dense     dense-masked W_S only       x @ W_Sᵀ (XLA; dense-masked
                                                bytes equal dense — the
                                                format tag still marks the
                                                linear as served-in-format)
+
+Unstructured sparse parts are routed to the row-padded ELL format
+(uint16 column ids, K_max = realized max per-row nnz) whenever it wins
+on bytes — ``packing.ell_wins_bytes`` — so unstructured SLaB /
+HASSLE-free / Wanda layers finally store fewer HBM bytes than dense;
+the ``*-dense`` variants remain the fallback for near-dense sparsity or
+D_in beyond uint16.
 
 Static metadata (variant, m_pat, d_in, d_out, rank) rides in the pytree
 aux data, so stacks of packed layers slice cleanly through ``lax.scan``
@@ -29,11 +39,15 @@ invariant the packer enforces.
 
 Heterogeneous paths — different variants/patterns/ranks across layers of
 one path, or partial layer coverage — pack into a ``PackedStack``:
-segmented per-variant stacks keyed by (variant, pattern, rank) plus an
-optional stacked dense remainder. A PackedStack cannot slice through one
-``lax.scan`` (leaf shapes differ per layer), so ``models.lm`` unrolls
-the layer loop when one is present; fully-covered single-variant paths
-keep the scanned fast path.
+per-signature stacks keyed by the full packed signature (variant aux +
+leaf shapes, so e.g. two ELL groups with different K_max never stack)
+plus an optional stacked dense remainder. A PackedStack cannot slice
+through ONE ``lax.scan`` (leaf shapes differ per layer), but the layer
+axis always partitions into maximal contiguous runs with identical
+per-path signatures — ``segment_runs`` — and each run scans: ``models.
+lm`` drives one ``lax.scan`` per segment (`layer_slice_range` emits the
+per-segment stacked leaves), so a mixed plan on an L-layer model traces
+O(#segments) layer bodies instead of O(L).
 
 CPU note: Mosaic only compiles on TPU; on CPU the kernels run in
 interpret mode (numerics-exact, slow) — the packed path is exercised by
@@ -42,19 +56,23 @@ tests/examples at smoke scale and is the TPU serving configuration.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, NamedTuple, Optional, Tuple
+import types
+import warnings
+from typing import Dict, List, Mapping, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.packing import pack_nm, pack_sign_bits
+from repro.core.packing import (ell_pack, ell_row_nnz_max, ell_wins_bytes,
+                                pack_nm, pack_sign_bits)
 from repro.core.slab import SLaBDecomposition
 from repro.models.common import tap_record
 
 Array = jax.Array
 
-PACKED_VARIANTS = ("slab-nm", "slab-dense", "binlr", "lowrank-nm",
-                   "lowrank-dense", "lowrank", "sparse-nm", "sparse-dense")
+PACKED_VARIANTS = ("slab-nm", "slab-ell", "slab-dense", "binlr",
+                   "lowrank-nm", "lowrank-ell", "lowrank-dense", "lowrank",
+                   "sparse-nm", "sparse-ell", "sparse-dense")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -68,8 +86,9 @@ class PackedLinear:
     stacking/slicing and checked for equality by tree operations.
 
     sparse_vals : (D_out, D_in) dense-masked W_S, or (D_out, D_in/m, n)
-                  N:M values, or None.
-    sparse_idx  : (D_out, D_in/m, n) int8 N:M positions, or None.
+                  N:M values, or (D_out, K_max) ELL values, or None.
+    sparse_idx  : (D_out, D_in/m, n) int8 N:M positions, or
+                  (D_out, K_max) uint16 ELL column ids, or None.
     b_packed    : (D_out, D_in/32) uint32 sign bits, or None.
     u, v        : (D_out, r) / (D_in, r) low-rank factors, or None.
     """
@@ -99,14 +118,15 @@ class PackedLinear:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class PackedStack:
-    """Segmented packed stacks for one linear path across the layer dim.
+    """Signature-grouped packed stacks for one linear path across the
+    layer dim.
 
     ``groups[g]`` is a PackedLinear stacked over ``members[g]`` (layer
     ids, ascending); ``dense`` is the original stacked weight restricted
     to ``dense_members`` — layers the plan left dense (partial
-    coverage). Membership is static aux data so ``at_layer`` resolves at
-    trace time; the model unrolls its layer loop over one of these.
-    """
+    coverage). Membership is static aux data so ``at_layer`` /
+    ``segment`` resolve at trace time; the model scans contiguous
+    same-signature layer runs of one of these (``segment_runs``)."""
 
     groups: Tuple[PackedLinear, ...]
     dense: Optional[Array]
@@ -122,16 +142,38 @@ class PackedStack:
     def tree_unflatten(cls, aux, children):
         return cls(children[0], children[1], *aux)
 
+    def owner_group(self, l: int) -> int:
+        """Index of the group holding layer ``l`` (-1 = dense remainder)."""
+        for gi, mem in enumerate(self.members):
+            if l in mem:
+                return gi
+        if l in self.dense_members:
+            return -1
+        raise KeyError(f"layer {l} not held by this PackedStack")
+
     def at_layer(self, l: int):
         """The layer-``l`` leaf: a sliced PackedLinear or a dense 2-D
         weight (in model (D_in, D_out) orientation)."""
-        for grp, mem in zip(self.groups, self.members):
-            if l in mem:
-                i = mem.index(l)
-                return jax.tree.map(lambda a: a[i], grp)
-        if l in self.dense_members:
-            return self.dense[self.dense_members.index(l)]
-        raise KeyError(f"layer {l} not held by this PackedStack")
+        leaf = self.segment(l, l + 1)
+        return jax.tree.map(lambda a: a[0], leaf)
+
+    def segment(self, lo: int, hi: int):
+        """The stacked leaf for the contiguous layer run [lo, hi): a
+        (hi-lo)-stacked PackedLinear or dense weight stack. The run must
+        lie inside ONE group (or the dense remainder) — guaranteed for
+        runs produced by ``segment_runs``; membership tuples are sorted,
+        so in-group runs are contiguous slices of the stacked arrays."""
+        gi = self.owner_group(lo)
+        if gi < 0:
+            i = self.dense_members.index(lo)
+            if self.dense_members[i:i + hi - lo] != tuple(range(lo, hi)):
+                raise ValueError(f"layers [{lo},{hi}) straddle groups")
+            return self.dense[i:i + hi - lo]
+        mem = self.members[gi]
+        i = mem.index(lo)
+        if mem[i:i + hi - lo] != tuple(range(lo, hi)):
+            raise ValueError(f"layers [{lo},{hi}) straddle groups")
+        return jax.tree.map(lambda a: a[i:i + hi - lo], self.groups[gi])
 
     def variant_counts(self) -> Dict[str, int]:
         out: Dict[str, int] = {}
@@ -145,8 +187,8 @@ def _is_packed_leaf(x) -> bool:
 
 
 def has_hetero(tree) -> bool:
-    """True if any leaf is a PackedStack (forces the unrolled layer
-    loop; homogeneous stacked PackedLinears scan fine)."""
+    """True if any leaf is a PackedStack (forces the segmented layer
+    loop; homogeneous stacked PackedLinears scan as one segment)."""
     return any(isinstance(l, PackedStack)
                for l in jax.tree.leaves(tree, is_leaf=_is_packed_leaf))
 
@@ -164,6 +206,43 @@ def layer_slice(tree, l: int):
 
 
 # ------------------------------------------------------------------
+# Contiguous-segment scan groups
+# ------------------------------------------------------------------
+
+def segment_runs(tree, n_layers: int) -> Tuple[Tuple[int, int], ...]:
+    """Partition the layer axis into maximal contiguous runs [lo, hi)
+    with identical packed signatures: within a run, every PackedStack
+    leaf stays inside one of its groups (or its dense remainder), so
+    ``layer_slice_range`` yields per-segment stacked leaves with
+    layer-invariant structure and one ``lax.scan`` drives the whole
+    run. A fully homogeneous tree is the single run ((0, L),)."""
+    stacks = [l for l in jax.tree.leaves(tree, is_leaf=_is_packed_leaf)
+              if isinstance(l, PackedStack)]
+    owners = [[s.owner_group(l) for s in stacks] for l in range(n_layers)]
+    runs: List[Tuple[int, int]] = []
+    lo = 0
+    for l in range(1, n_layers):
+        if owners[l] != owners[l - 1]:
+            runs.append((lo, l))
+            lo = l
+    runs.append((lo, n_layers))
+    return tuple(runs)
+
+
+def layer_slice_range(tree, lo: int, hi: int):
+    """Restrict a stacked layers tree to the contiguous run [lo, hi),
+    resolving PackedStack leaves to their per-segment stacked form.
+    Every leaf keeps a leading layer dim of hi-lo, so the result scans."""
+    def f(x):
+        if isinstance(x, PackedStack):
+            return x.segment(lo, hi)
+        if isinstance(x, PackedLinear):
+            return jax.tree.map(lambda a: a[lo:hi], x)
+        return x[lo:hi]
+    return jax.tree.map(f, tree, is_leaf=_is_packed_leaf)
+
+
+# ------------------------------------------------------------------
 # Variant classification + per-linear packing
 # ------------------------------------------------------------------
 
@@ -173,8 +252,27 @@ def _dec_rank(dec: SLaBDecomposition) -> int:
     return dec.u.shape[1] if dec.u.ndim == 2 else 1
 
 
-def variant_of(dec: SLaBDecomposition,
-               pattern: Optional[str]) -> Optional[str]:
+def _unstructured_kind(w_s: Array, itemsize: Optional[int] = None,
+                       k_max: Optional[int] = None) -> str:
+    """"ell" when row-padded ELL beats the dense bytes of this sparse
+    part (uint16-representable D_in included), else "dense".
+    ``itemsize`` is the SERVING value width (defaults to the dec's own
+    dtype; the packer passes its pack dtype — a bf16 serve halves the
+    dense bytes and tightens the ELL threshold to K_max < D_in/2).
+    ``k_max`` skips the row-nnz device sync when the caller already
+    paid it — otherwise pack/classification time only."""
+    d_in = w_s.shape[1]
+    itemsize = w_s.dtype.itemsize if itemsize is None else itemsize
+    if k_max is None:
+        k_max = ell_row_nnz_max(w_s)
+    if ell_wins_bytes(k_max, d_in, itemsize):
+        return "ell"
+    return "dense"
+
+
+def variant_of(dec: SLaBDecomposition, pattern: Optional[str],
+               itemsize: Optional[int] = None,
+               k_max: Optional[int] = None) -> Optional[str]:
     """Classify one decomposition into its packed-serving variant (None
     = not representable; stays dense). The binary term only counts when
     a low-rank factor exists — W_L ⊙ W_B with empty W_L is identically
@@ -185,12 +283,16 @@ def variant_of(dec: SLaBDecomposition,
     rank = _dec_rank(dec)
     has_b = (dec.w_b is not None and dec.w_b.size > 0 and rank > 0)
     if not has_b and rank == 0:
-        # pruning-only dec: the sparse part is the only term, so no
-        # device sync is needed to disambiguate (an all-zero W_S would
-        # just serve zeros — same as its dense equivalent)
-        return f"sparse-{'nm' if pattern else 'dense'}"
+        # pruning-only dec: the sparse part is the only term — route it
+        # to ELL when that wins on bytes (an all-zero W_S packs as a
+        # width-1 ELL serving zeros, same as its dense equivalent)
+        kind = ("nm" if pattern
+                else _unstructured_kind(dec.w_s, itemsize, k_max))
+        return f"sparse-{kind}"
     has_s = bool(dec.w_s.size) and bool(jnp.any(dec.w_s != 0))
-    kind = ("nm" if pattern else "dense") if has_s else None
+    kind = (("nm" if pattern
+             else _unstructured_kind(dec.w_s, itemsize, k_max))
+            if has_s else None)
     if has_b:
         return f"slab-{kind}" if kind else "binlr"
     if rank > 0:
@@ -200,10 +302,17 @@ def variant_of(dec: SLaBDecomposition,
 
 def pack_linear(dec: SLaBDecomposition, pattern: Optional[str],
                 dtype=jnp.float32,
-                variant: Optional[str] = None) -> PackedLinear:
-    """Pack one decomposition into its variant's storage format."""
+                variant: Optional[str] = None,
+                ell_nnz: Optional[int] = None) -> PackedLinear:
+    """Pack one decomposition into its variant's storage format.
+    ``ell_nnz`` overrides the ELL pad width K_max (callers that already
+    synced the row-nnz reduction, or that stack several layers at one
+    shared width, pass it to skip the recompute)."""
     d_out, d_in = dec.w_s.shape
-    variant = variant_of(dec, pattern) if variant is None else variant
+    if variant is None:
+        variant = variant_of(dec, pattern,
+                             itemsize=jnp.dtype(dtype).itemsize,
+                             k_max=ell_nnz)
     if variant is None:
         raise ValueError("decomposition has no packable terms")
     rank = _dec_rank(dec)
@@ -220,19 +329,48 @@ def pack_linear(dec: SLaBDecomposition, pattern: Optional[str],
         # actual output must fail loudly, not drop values
         nm = pack_nm(dec.w_s.astype(dtype), n, m_pat, strict=True)
         vals, idx = nm.values, nm.indices
+    elif variant.endswith("-ell"):
+        ep = ell_pack(dec.w_s.astype(dtype), nnz=ell_nnz)
+        vals, idx = ep.values, ep.indices
     elif variant.endswith("-dense") or variant.startswith("sparse"):
         vals = dec.w_s.astype(dtype)
     return PackedLinear(vals, idx, bp, u, v, variant=variant, m_pat=m_pat,
                         d_in=d_in, d_out=d_out, rank=rank)
 
 
+def _pick_block(dim: int, cap: int, mult: int = 1) -> int:
+    """Largest block ≤ cap that divides ``dim`` and is a multiple of
+    ``mult`` — collapses the grid to one step whenever the axis fits
+    (the dominant cost at decode/smoke shapes is per-grid-step, not
+    per-element). Falls back to the full axis (single block)."""
+    if dim <= cap:
+        return dim
+    for b in range(cap, 0, -1):
+        if dim % b == 0 and b % mult == 0:
+            return b
+    return dim
+
+
 def packed_matmul(x: Array, w: PackedLinear,
                   interpret: Optional[bool] = None) -> Array:
     """x (..., D_in) @ Wᵀ through the variant's fused kernel."""
     from repro.kernels import ops
-    bk = min(512, w.d_in)
-    kw = dict(bm=128, bn=128, bk=bk, interpret=interpret)
     var = w.variant
+    if var.endswith("-ell"):
+        kw = dict(bm=128, bn=_pick_block(w.d_out, 256),
+                  interpret=interpret)
+        if var == "sparse-ell":
+            y = ops.ell_matmul(x, w.sparse_vals, w.sparse_idx, **kw)
+        elif var == "lowrank-ell":
+            y = ops.ell_lr_matmul(x, w.sparse_vals, w.sparse_idx,
+                                  w.u, w.v, **kw)
+        else:
+            y = ops.slab_ell_matmul(x, w.sparse_vals, w.sparse_idx,
+                                    w.b_packed, w.u, w.v, **kw)
+        return y.astype(x.dtype)
+    mult = (w.m_pat or 1) * (32 if (w.b_packed is not None) else 1)
+    kw = dict(bm=128, bn=_pick_block(w.d_out, 256),
+              bk=_pick_block(w.d_in, 1024, mult), interpret=interpret)
     if var == "slab-nm":
         y = ops.slab_nm_matmul(x, w.sparse_vals, w.sparse_idx, w.m_pat,
                                w.b_packed, w.u, w.v, **kw)
@@ -280,19 +418,75 @@ def linear(x: Array, w, tap: Optional[str] = None) -> Array:
 # Whole-model packing
 # ------------------------------------------------------------------
 
+class Segment(NamedTuple):
+    """One contiguous same-signature layer run of a packed model."""
+    lo: int
+    hi: int                            # exclusive
+    sig: Tuple[Tuple[str, str], ...]   # (path, descriptor) per packed path
+
+
 class PackReport(NamedTuple):
     """What pack_plan_decs did: per-variant packed-linear counts, the
-    packed paths, and the (layer, path) decs left on the dense path."""
+    packed paths, the (layer, path) decs left on the dense path, the
+    contiguous scan segments, and per-variant packed-vs-dense bytes."""
     n_packed: int
     by_variant: Dict[str, int]
     paths: List[str]
     fallback: List[Tuple[int, str]]
+    segments: Tuple[Segment, ...] = ()
+    bytes_by_variant: Mapping[str, Tuple[float, float]] = \
+        types.MappingProxyType({})   # immutable: defaults never alias a
+                                     # mutable dict across instances
 
 
 def _stack_group(pls: List[PackedLinear]) -> PackedLinear:
     if len(pls) == 1:
         return jax.tree.map(lambda a: a[None], pls[0])
     return jax.tree.map(lambda *xs: jnp.stack(xs), *pls)
+
+
+def _pack_signature(pl: PackedLinear) -> Tuple:
+    """Full stacking key: static aux + per-leaf (shape, dtype). Groups
+    may only stack layers whose arrays are congruent — e.g. two ELL
+    layers with different realized K_max get distinct signatures."""
+    aux = (pl.variant, pl.m_pat, pl.d_in, pl.d_out, pl.rank)
+    leaves = tuple((None if a is None else (a.shape, str(a.dtype)))
+                   for a in (pl.sparse_vals, pl.sparse_idx, pl.b_packed,
+                             pl.u, pl.v))
+    return aux + leaves
+
+
+def _describe(pl: PackedLinear) -> str:
+    d = pl.variant
+    if pl.m_pat:
+        d += f"({pl.sparse_vals.shape[-1]}:{pl.m_pat})"
+    elif pl.variant.endswith("-ell"):
+        d += f"(kmax={pl.sparse_vals.shape[-1]})"
+    if pl.rank:
+        d += f" r{pl.rank}"
+    return d
+
+
+def _model_segments(layers_tree, n_layers: int,
+                    paths: List[str]) -> Tuple[Segment, ...]:
+    """The contiguous scan segments of a packed layers tree plus, per
+    segment, the (path, variant descriptor) signature serve.py prints."""
+    from repro.core.pipeline import _get
+    segs = []
+    for lo, hi in segment_runs(layers_tree, n_layers):
+        sig = []
+        for p in paths:
+            leaf = _get(layers_tree, p)
+            if isinstance(leaf, PackedStack):
+                gi = leaf.owner_group(lo)
+                desc = ("dense" if gi < 0
+                        else _describe(jax.tree.map(lambda a: a[0],
+                                                    leaf.groups[gi])))
+            else:
+                desc = _describe(jax.tree.map(lambda a: a[0], leaf))
+            sig.append((p, desc))
+        segs.append(Segment(lo, hi, tuple(sig)))
+    return tuple(segs)
 
 
 def pack_plan_decs(params: dict,
@@ -305,12 +499,13 @@ def pack_plan_decs(params: dict,
     plan — mixed variants, mixed N:M patterns, mixed ranks, and partial
     layer coverage per path all pack:
 
-      * layers of one path with the same (variant, pattern, rank) stack
-        into one scan-sliceable group;
+      * layers of one path with the same packed signature (variant aux
+        + array shapes) stack into one scan-sliceable group;
       * a path whose single group covers all layers stays a plain
-        stacked PackedLinear (the lax.scan fast path);
-      * anything else becomes a PackedStack of segmented groups plus
-        the dense remainder, and the model unrolls its layer loop.
+        stacked PackedLinear (one-scan fast path);
+      * anything else becomes a PackedStack of signature groups plus
+        the dense remainder, and the model scans the maximal contiguous
+        same-signature layer runs (``segment_runs``).
 
     Patterns come from each dec's own resolved plan rule (per (layer,
     path) — not layer 0's), so paths whose early layers are skipped or
@@ -318,54 +513,75 @@ def pack_plan_decs(params: dict,
     per-(layer, path) classification the pipeline already computed
     (``CompressStats.variant``; "" = unservable) so the per-linear
     ``variant_of`` device sync isn't paid twice. Returns
-    (params, PackReport)."""
+    (params, PackReport); a warning is emitted for any packed variant
+    whose measured bytes exceed its dense footprint."""
     from repro.core.pipeline import _get, _set
 
-    by_path: Dict[str, Dict[Tuple[str, Optional[str], int],
-                            List[Tuple[int, SLaBDecomposition,
-                                       Optional[str]]]]] = {}
+    pack_itemsize = jnp.dtype(dtype).itemsize
+    by_path: Dict[str, Dict[Tuple,
+                            List[Tuple[int, PackedLinear]]]] = {}
     fallback: List[Tuple[int, str]] = []
     for (l, name) in sorted(decs, key=lambda k: (k[1], k[0])):
         dec = decs[(l, name)]
         r = plan.resolve(l, name)
         pattern = r.scfg.pattern if r is not None else None
+        # the row-nnz device sync is LAZY: a pipeline-supplied dense-kind
+        # variant at matching dtypes pays zero extra syncs, and an
+        # ELL-routed linear pays exactly one (shared by the dtype
+        # revalidation and ell_pack's pad width)
+        k_max = None
         if variants is not None and (l, name) in variants:
             var = variants[(l, name)] or None
+            if (var is not None and var.endswith(("-ell", "-dense"))
+                    and dec.w_s.dtype.itemsize != pack_itemsize):
+                # the pipeline classified at the dec's own dtype; the
+                # ELL-vs-dense bytes race depends on the PACK dtype
+                k_max = ell_row_nnz_max(dec.w_s)
+                base = var.rsplit("-", 1)[0]
+                var = (f"{base}-"
+                       f"{_unstructured_kind(dec.w_s, pack_itemsize, k_max)}")
         else:
-            var = variant_of(dec, pattern)
+            var = variant_of(dec, pattern, itemsize=pack_itemsize)
         if var is None:
             fallback.append((l, name))
             continue
-        key = (var, pattern if var.endswith("-nm") else None,
-               _dec_rank(dec))
-        by_path.setdefault(name, {}).setdefault(key, []).append(
-            (l, dec, pattern))
+        if var.endswith("-ell") and k_max is None:
+            k_max = ell_row_nnz_max(dec.w_s)
+        pl = pack_linear(dec, pattern, dtype, variant=var,
+                         ell_nnz=k_max if var.endswith("-ell") else None)
+        by_path.setdefault(name, {}).setdefault(
+            _pack_signature(pl), []).append((l, pl))
 
     out = jax.tree.map(lambda a: a, params)     # shallow copy
     n_packed = 0
     by_variant: Dict[str, int] = {}
+    bytes_by_variant: Dict[str, List[float]] = {}
     packed_paths: List[str] = []
     for name, groups in sorted(by_path.items()):
         old = _get(out["layers"], name)
         if old is None:
             fallback.extend((l, name) for vs in groups.values()
-                            for (l, _, _) in vs)
+                            for (l, _) in vs)
             continue
+        per_dense = old.nbytes / old.shape[0]
         stacked_groups: List[PackedLinear] = []
         members: List[Tuple[int, ...]] = []
         for key in sorted(groups, key=str):
-            var = key[0]
             layers = groups[key]
-            pls = [pack_linear(dec, pat, dtype, variant=var)
-                   for (_, dec, pat) in layers]
-            stacked_groups.append(_stack_group(pls))
-            members.append(tuple(l for (l, _, _) in layers))
+            var = layers[0][1].variant
+            stacked_groups.append(_stack_group([pl for (_, pl) in layers]))
+            members.append(tuple(l for (l, _) in layers))
             by_variant[var] = by_variant.get(var, 0) + len(layers)
             n_packed += len(layers)
+            agg = bytes_by_variant.setdefault(var, [0.0, 0.0, 0])
+            for (_, pl) in layers:
+                agg[0] += sum(a.nbytes for a in jax.tree.leaves(pl))
+                agg[1] += per_dense
+                agg[2] += 1
         covered = {l for mem in members for l in mem}
         missing = tuple(l for l in range(n_layers) if l not in covered)
         if not missing and len(stacked_groups) == 1:
-            leaf = stacked_groups[0]            # lax.scan fast path
+            leaf = stacked_groups[0]            # one-scan fast path
         else:
             dense = (jnp.stack([old[l] for l in missing])
                      if missing else None)
@@ -373,8 +589,20 @@ def pack_plan_decs(params: dict,
                                tuple(members), missing, n_layers)
         _set(out["layers"], name, leaf)
         packed_paths.append(name)
+
+    per_linear = {var: (p / n, d / n)
+                  for var, (p, d, n) in bytes_by_variant.items()}
+    for var, (p, d) in sorted(per_linear.items()):
+        if p > d:
+            warnings.warn(
+                f"packed variant {var!r} stores {p / d:.2f}x its dense "
+                f"bytes ({p / 1e3:.1f} kB vs {d / 1e3:.1f} kB per linear)"
+                " — this format loses on the serving roofline",
+                stacklevel=2)
+    segments = _model_segments(out["layers"], n_layers, packed_paths)
     return out, PackReport(n_packed, by_variant, packed_paths,
-                           sorted(fallback, key=lambda k: (k[1], k[0])))
+                           sorted(fallback, key=lambda k: (k[1], k[0])),
+                           segments, per_linear)
 
 
 def pack_model(params: dict,
@@ -390,15 +618,25 @@ def pack_model(params: dict,
     from repro.core.pipeline import _get, _set
     out = jax.tree.map(lambda a: a, params)     # shallow copy
     paths = sorted({p for (_, p) in decs})
+    itemsize = jnp.dtype(dtype).itemsize
     for path in paths:
         if any((l, path) not in decs for l in range(n_layers)):
             continue                             # partial coverage: skip
-        variants = [variant_of(decs[(l, path)], pattern)
+        variants = [variant_of(decs[(l, path)], pattern, itemsize)
                     for l in range(n_layers)]
         if len(set(variants)) != 1 or variants[0] is None:
             continue                             # mixed variants: skip
+        # ELL layers of one path pack at the shared per-path K_max so
+        # ragged realized widths still stack (a few pad columns beat
+        # silently losing the whole path to dense)
+        ell_nnz = None
+        if variants[0].endswith("-ell"):
+            ell_nnz = max(ell_row_nnz_max(decs[(l, path)].w_s)
+                          for l in range(n_layers))
         per_layer = [pack_linear(decs[(l, path)], pattern, dtype,
-                                 variant=variants[l])
+                                 variant=variants[l], ell_nnz=ell_nnz)
                      for l in range(n_layers)]
+        if len({_pack_signature(pl) for pl in per_layer}) != 1:
+            continue                             # incongruent terms: skip
         _set(out["layers"], path, _stack_group(per_layer))
     return out

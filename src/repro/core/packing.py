@@ -5,8 +5,9 @@ stream from HBM.
                (16x smaller than bf16; bit j of word g is column g*32+j).
 - N:M packed:  W_S (2:4 / 4:8) -> values (Do, Di*n/m) + int8 indices
                (position of each kept element inside its m-group).
-- ELL packed:  row-uniform unstructured W_S -> values (Do, nnz) + int32
-               column indices (padded rows get index 0, value 0).
+- ELL packed:  unstructured W_S -> row-padded values (Do, K_max) +
+               uint16 column indices, K_max = realized max per-row nnz
+               (short rows pad with value 0 at a zero column).
 """
 from __future__ import annotations
 
@@ -99,27 +100,47 @@ def nm_packed_bits(p: NMPacked, bits: int = 16) -> int:
 # ------------------------------ ELL packing ----------------------------
 
 class ELLPacked(NamedTuple):
-    values: Array   # (Do, nnz)
-    indices: Array  # (Do, nnz) int32 column ids
-    d_in: int
+    values: Array   # (Do, K_max)
+    indices: Array  # (Do, K_max) uint16 column ids (2 bytes — the reason
+    d_in: int       # ELL beats dense bytes at 50% unstructured sparsity)
 
 
-def ell_pack(w_s: Array, nnz: int) -> ELLPacked:
-    """Pack a row-uniform sparse matrix ((1, D_in) comparison groups make
-    every row carry the same nnz). Short rows are zero-padded."""
+def ell_row_nnz_max(w_s: Array) -> int:
+    """Realized K_max of a sparse matrix: the largest per-row nnz (the
+    ELL pad width). Device sync — pack-time only."""
+    return max(1, int(jnp.max(jnp.sum(w_s != 0, axis=1))))
+
+
+_ELL_MAX_DIN = 2 ** 16   # uint16 column ids; wider linears stay dense
+
+
+def ell_wins_bytes(k_max: int, d_in: int, itemsize: int = 4) -> bool:
+    """True when row-padded ELL (values at ``itemsize`` bytes + uint16
+    indices) stores strictly fewer bytes than the dense matrix."""
+    return d_in <= _ELL_MAX_DIN and k_max * (itemsize + 2) < d_in * itemsize
+
+
+def ell_pack(w_s: Array, nnz: int | None = None) -> ELLPacked:
+    """Row-padded ELL: keep each row's ``nnz`` largest-magnitude entries
+    (default: the realized per-row max, so nothing is dropped). Short
+    rows pad with (value 0, index of some zero column)."""
     d_out, d_in = w_s.shape
+    if d_in > _ELL_MAX_DIN:
+        raise ValueError(f"D_in={d_in} overflows uint16 ELL indices")
+    if nnz is None:
+        nnz = ell_row_nnz_max(w_s)
     keys = jnp.where(w_s != 0, -jnp.abs(w_s.astype(jnp.float32)), jnp.inf)
     idx = jnp.argsort(keys, axis=1)[:, :nnz].astype(jnp.int32)
     idx = jnp.sort(idx, axis=1)
     vals = jnp.take_along_axis(w_s, idx, axis=1)
-    return ELLPacked(vals, idx, d_in)
+    return ELLPacked(vals, idx.astype(jnp.uint16), d_in)
 
 
 def ell_unpack(p: ELLPacked) -> Array:
     d_out, nnz = p.values.shape
     rows = jnp.arange(d_out)[:, None]
     out = jnp.zeros((d_out, p.d_in), p.values.dtype)
-    return out.at[rows, p.indices].add(p.values)
+    return out.at[rows, p.indices.astype(jnp.int32)].add(p.values)
 
 
 # --------------------------- SLaB packed bundle ------------------------

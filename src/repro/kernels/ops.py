@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.core.packing import NMPacked, SLaBPacked
 from repro.kernels import binlr as binlr_k
+from repro.kernels import ell as ell_k
 from repro.kernels import nm_sparse as nm_k
 from repro.kernels import slab_matmul as slab_k
 
@@ -138,6 +139,53 @@ def slab_nm_lr_matmul(x: Array, vals: Array, idx: Array, m_pat: int,
     x2 = _pad_rows(x2, min(bm, max(m, 1)))
     y = slab_k.slab_nm_lr_matmul(x2, vals, idx, m_pat, u, v,
                                  bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return y[:m].reshape(*lead, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def ell_matmul(x: Array, vals: Array, idx: Array,
+               bm: int = 128, bn: int = 256,
+               interpret: Optional[bool] = None) -> Array:
+    """Row-padded ELL unstructured-sparse matmul (gather-matmul kernel)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    m = x2.shape[0]
+    x2 = _pad_rows(x2, min(bm, max(m, 1)))
+    y = ell_k.ell_matmul(x2, vals, idx, bm=bm, bn=bn, interpret=interpret)
+    return y[:m].reshape(*lead, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def ell_lr_matmul(x: Array, vals: Array, idx: Array, u: Array, v: Array,
+                  bm: int = 128, bn: int = 256,
+                  interpret: Optional[bool] = None) -> Array:
+    """ELL sparse + rank-r low-rank, no binary term."""
+    interpret = _on_cpu() if interpret is None else interpret
+    u, v = _rank_stack(u, v)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    m = x2.shape[0]
+    x2 = _pad_rows(x2, min(bm, max(m, 1)))
+    y = ell_k.ell_lr_matmul(x2, vals, idx, u, v, bm=bm, bn=bn,
+                            interpret=interpret)
+    return y[:m].reshape(*lead, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def slab_ell_matmul(x: Array, vals: Array, idx: Array, b_packed: Array,
+                    u: Array, v: Array,
+                    bm: int = 128, bn: int = 256,
+                    interpret: Optional[bool] = None) -> Array:
+    """Full SLaB linear with ELL sparse part + binary ⊙ rank-r term."""
+    interpret = _on_cpu() if interpret is None else interpret
+    u, v = _rank_stack(u, v)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    m = x2.shape[0]
+    x2 = _pad_rows(x2, min(bm, max(m, 1)))
+    y = ell_k.slab_ell_matmul(x2, vals, idx, b_packed, u, v, bm=bm, bn=bn,
+                              interpret=interpret)
     return y[:m].reshape(*lead, -1)
 
 

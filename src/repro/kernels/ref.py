@@ -8,7 +8,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.packing import unpack_nm, unpack_sign_bits, NMPacked
+from repro.core.packing import (ELLPacked, NMPacked, ell_unpack, unpack_nm,
+                                unpack_sign_bits)
 
 Array = jax.Array
 
@@ -42,6 +43,24 @@ def nm_matmul_ref(x: Array, vals: Array, idx: Array, m: int) -> Array:
     d_in = vals.shape[1] * m
     w = unpack_nm(NMPacked(vals, idx, n, m, d_in))
     return x.astype(jnp.float32) @ w.astype(jnp.float32).T
+
+
+def ell_matmul_ref(x: Array, vals: Array, idx: Array, d_in: int) -> Array:
+    """y = x @ W_Sᵀ with W_S in row-padded ELL form."""
+    w = ell_unpack(ELLPacked(vals, idx, d_in))
+    return x.astype(jnp.float32) @ w.astype(jnp.float32).T
+
+
+def ell_lr_matmul_ref(x: Array, vals: Array, idx: Array, d_in: int,
+                      u: Array, v: Array) -> Array:
+    """ELL sparse + rank-r low-rank, no binary."""
+    return ell_matmul_ref(x, vals, idx, d_in) + lowrank_ref(x, u, v)
+
+
+def slab_ell_matmul_ref(x: Array, vals: Array, idx: Array, d_in: int,
+                        b_packed: Array, u: Array, v: Array) -> Array:
+    """Fused SLaB linear with ELL sparse part."""
+    return ell_matmul_ref(x, vals, idx, d_in) + binlr_ref(x, b_packed, u, v)
 
 
 def slab_matmul_ref(x: Array, w_s: Array, b_packed: Array,

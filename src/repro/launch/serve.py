@@ -157,7 +157,7 @@ def main():
                         else CompressionPlan.parse(f"*={args.compress}",
                                                    base=scfg))
             params, rep = pack_plan_decs(
-                params, out[2], cfg.n_layers, eff_plan,
+                params, out[2], cfg.n_layers, eff_plan, dtype=cfg.dtype,
                 variants={(s.layer, s.name): s.variant for s in stats})
             if rep.n_packed:
                 variants = " ".join(
@@ -168,6 +168,18 @@ def main():
                 if rep.fallback:
                     print("  dense-fallback linears:",
                           ", ".join(f"L{l}/{p}" for l, p in rep.fallback))
+                print(f"segment layout: {len(rep.segments)} scan "
+                      f"segment(s) over {cfg.n_layers} layers")
+                for seg in rep.segments:
+                    span = (f"L{seg.lo}" if seg.hi == seg.lo + 1
+                            else f"L{seg.lo}-L{seg.hi - 1}")
+                    print(f"  {span}: " + "  ".join(
+                        f"{p}={d}" for p, d in seg.sig))
+                for var, (pb, db) in sorted(rep.bytes_by_variant.items()):
+                    flag = "  <-- exceeds dense" if pb > db else ""
+                    print(f"  bytes/{var}: {pb / 1e3:.1f} kB packed vs "
+                          f"{db / 1e3:.1f} kB dense "
+                          f"({pb / db:.2f}x){flag}")
             else:
                 print("--packed: plan produced no packable "
                       "decompositions; serving dense-equivalent weights")

@@ -26,7 +26,8 @@ from typing import Any, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.packed_model import has_hetero, layer_slice
+from repro.core.packed_model import (has_hetero, layer_slice_range,
+                                     segment_runs)
 from repro.models import attention as attn_lib
 from repro.models import mamba2 as mamba_lib
 from repro.models import mlp as mlp_lib
@@ -209,13 +210,19 @@ def unembed(cfg: ArchConfig, params: dict, h: Array) -> Array:
 def forward(cfg: ArchConfig, params: dict, inputs: Array,
             positions: Optional[Array] = None,
             remat_policy: Optional[Any] = None,
-            remat_block: int = 1) -> Tuple[Array, Array]:
+            remat_block: int = 1,
+            segments: Optional[Tuple[Tuple[int, int], ...]] = None
+            ) -> Tuple[Array, Array]:
     """Full-sequence forward. Returns (logits (B,S,V), aux_loss).
 
     ``remat_block`` > 1 enables sqrt-L block checkpointing: layers are
     scanned in groups of ``remat_block``; only group-boundary carries are
     saved for the backward pass (G + K live carries instead of L — the
-    change that fits nemotron-340B's activations into v5e HBM)."""
+    change that fits nemotron-340B's activations into v5e HBM).
+
+    ``segments`` overrides the layer-axis partition of the segmented
+    path (benchmarking the unrolled equivalent = per-layer segments);
+    heterogeneous packed stacks compute it via ``segment_runs``."""
     from repro.runtime.meshctx import DP, hint
     b, s = inputs.shape[0], inputs.shape[1]
     if positions is None:
@@ -225,27 +232,31 @@ def forward(cfg: ArchConfig, params: dict, inputs: Array,
 
     stacked = params["layers"]
 
-    if has_hetero(stacked):
-        # Heterogeneous packed stacks (PackedStack leaves) hold
-        # different per-layer array shapes, so they cannot slice through
-        # one lax.scan — unroll the layer loop instead. Serving-only
-        # path (packed weights never train), so remat is irrelevant;
-        # compile cost is O(L) at smoke/serving depths.
-        aux = jnp.zeros((), jnp.float32)
-        for l in range(cfg.n_layers):
-            h = hint(h, DP, None, None)
-            h, a = _layer_fwd(cfg, params, layer_slice(stacked, l),
-                              jnp.asarray(l), h, positions)
-            aux = aux + a
-        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
-        return unembed(cfg, params, h), aux
-
     def body(carry, xs):
         h, aux = carry
         lp, idx = xs
         h = hint(h, DP, None, None)   # re-pin batch sharding per layer
         h, a = _layer_fwd(cfg, params, lp, idx, h, positions)
         return (h, aux + a), None
+
+    if has_hetero(stacked) or segments is not None:
+        # Heterogeneous packed stacks (PackedStack leaves) change leaf
+        # shapes across layers, so ONE lax.scan can't span the model —
+        # but the layer axis partitions into maximal contiguous runs
+        # with identical packed signatures, and each run scans: one
+        # traced layer body per segment (O(#segments) compile, not
+        # O(L)). Serving-only path (packed weights never train), so
+        # remat is irrelevant.
+        if segments is None:
+            segments = segment_runs(stacked, cfg.n_layers)
+        carry = (h, jnp.zeros((), jnp.float32))
+        for lo, hi in segments:
+            carry, _ = jax.lax.scan(
+                body, carry,
+                (layer_slice_range(stacked, lo, hi), jnp.arange(lo, hi)))
+        h, aux = carry
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        return unembed(cfg, params, h), aux
 
     init = (h, jnp.zeros((), jnp.float32))
     k = remat_block
@@ -368,57 +379,34 @@ def _shared_block_decode(cfg: ArchConfig, sp: dict, h: Array,
     return h + m, kv
 
 
-def _decode_step_unrolled(cfg: ArchConfig, params: dict, cache: LayerCache,
-                          h: Array, positions: Array
-                          ) -> Tuple[Array, LayerCache]:
-    """Decode body for heterogeneous packed stacks: a Python layer loop
-    in place of lax.scan (PackedStack leaves change shape per layer).
-    Per-layer caches are sliced from / restacked into the same stacked
-    buffers the scanned path uses, so the two paths are interchangeable
-    step to step."""
-    if cfg.family in ("ssm", "hybrid"):
-        per = cfg.attn_every if cfg.family == "hybrid" else 0
-        skv = cache.shared_kv
-        mcs = []
-        for l in range(cfg.n_layers):
-            if per and l % per == per - 1:
-                inv = l // per
-                skv_l = jax.tree.map(lambda x: x[inv], skv)
-                h, skv_new = _shared_block_decode(
-                    cfg, params["shared_attn"], h, skv_l, positions)
-                skv = jax.tree.map(
-                    lambda buf, new: buf.at[inv].set(new), skv, skv_new)
-            lp = layer_slice(params["layers"], l)
-            mc_l = jax.tree.map(lambda x: x[l], cache.mamba)
-            h, mc_new = _layer_decode(cfg, params, lp, jnp.asarray(l), h,
-                                      mc_l, positions)
-            mcs.append(mc_new)
-        mc = jax.tree.map(lambda *xs: jnp.stack(xs), *mcs)
-        return h, LayerCache(None, mc, skv)
-    kvs = []
-    for l in range(cfg.n_layers):
-        lp = layer_slice(params["layers"], l)
-        kv_l = jax.tree.map(lambda x: x[l], cache.kv)
-        h, kv_new = _layer_decode(cfg, params, lp, jnp.asarray(l), h,
-                                  kv_l, positions)
-        kvs.append(kv_new)
-    kv = jax.tree.map(lambda *xs: jnp.stack(xs), *kvs)
-    return h, LayerCache(kv, None, None)
+def _cat_parts(parts):
+    if len(parts) == 1:
+        return parts[0]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts)
 
 
 def decode_step(cfg: ArchConfig, params: dict, cache: LayerCache,
-                token: Array, positions: Array) -> Tuple[Array, LayerCache]:
+                token: Array, positions: Array,
+                segments: Optional[Tuple[Tuple[int, int], ...]] = None
+                ) -> Tuple[Array, LayerCache]:
     """One decode step. token (B, 1) int32 (or (B,1,D) embeds);
-    positions (B,1[,3]). Returns (logits (B,1,V), new cache)."""
+    positions (B,1[,3]). Returns (logits (B,1,V), new cache).
+
+    The layer loop is one ``lax.scan`` per contiguous same-signature
+    segment (``segment_runs``): a homogeneous stack is the single
+    segment (0, L) — the classic one-scan decode — while heterogeneous
+    packed stacks trace O(#segments) layer bodies instead of O(L).
+    Per-segment caches are sliced from / concatenated back into the
+    same stacked buffers, so segmentations are interchangeable step to
+    step; ``segments`` overrides the partition (per-layer segments =
+    the old unrolled path, kept reachable for benchmarks/tests)."""
     from repro.runtime.meshctx import DP, hint
     h = embed_inputs(cfg, params, token)
     h = hint(h, DP, None, None)
 
-    if has_hetero(params["layers"]):
-        h, new_cache = _decode_step_unrolled(cfg, params, cache, h,
-                                             positions)
-        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
-        return unembed(cfg, params, h), new_cache
+    stacked = params["layers"]
+    if segments is None:
+        segments = segment_runs(stacked, cfg.n_layers)
 
     if cfg.family in ("ssm", "hybrid"):
         if cfg.family == "hybrid":
@@ -446,10 +434,16 @@ def decode_step(cfg: ArchConfig, params: dict, cache: LayerCache,
                                           positions)
                 return (h, skv), mc_new
 
-            (h, skv), mc = jax.lax.scan(
-                body, (h, cache.shared_kv),
-                (params["layers"], cache.mamba, jnp.arange(cfg.n_layers)))
-            new_cache = LayerCache(None, mc, skv)
+            carry, mc_parts = (h, cache.shared_kv), []
+            for lo, hi in segments:
+                carry, mc_new = jax.lax.scan(
+                    body, carry,
+                    (layer_slice_range(stacked, lo, hi),
+                     jax.tree.map(lambda x: x[lo:hi], cache.mamba),
+                     jnp.arange(lo, hi)))
+                mc_parts.append(mc_new)
+            (h, skv) = carry
+            new_cache = LayerCache(None, _cat_parts(mc_parts), skv)
         else:
             def body(h, xs):
                 lp, mc_l, idx = xs
@@ -457,10 +451,15 @@ def decode_step(cfg: ArchConfig, params: dict, cache: LayerCache,
                                           mc_l, positions)
                 return h, mc_new
 
-            h, mc = jax.lax.scan(
-                body, h, (params["layers"], cache.mamba,
-                          jnp.arange(cfg.n_layers)))
-            new_cache = LayerCache(None, mc, None)
+            mc_parts = []
+            for lo, hi in segments:
+                h, mc_new = jax.lax.scan(
+                    body, h,
+                    (layer_slice_range(stacked, lo, hi),
+                     jax.tree.map(lambda x: x[lo:hi], cache.mamba),
+                     jnp.arange(lo, hi)))
+                mc_parts.append(mc_new)
+            new_cache = LayerCache(None, _cat_parts(mc_parts), None)
     else:
         def body(h, xs):
             lp, kv_l, idx = xs
@@ -468,9 +467,15 @@ def decode_step(cfg: ArchConfig, params: dict, cache: LayerCache,
                                       attn_lib.KVCache(*kv_l), positions)
             return h, kv_new
 
-        h, kv = jax.lax.scan(
-            body, h, (params["layers"], cache.kv, jnp.arange(cfg.n_layers)))
-        new_cache = LayerCache(kv, None, None)
+        kv_parts = []
+        for lo, hi in segments:
+            h, kv_new = jax.lax.scan(
+                body, h,
+                (layer_slice_range(stacked, lo, hi),
+                 jax.tree.map(lambda x: x[lo:hi], cache.kv),
+                 jnp.arange(lo, hi)))
+            kv_parts.append(kv_new)
+        new_cache = LayerCache(_cat_parts(kv_parts), None, None)
 
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
     return unembed(cfg, params, h), new_cache

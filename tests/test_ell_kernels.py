@@ -1,0 +1,174 @@
+"""Row-padded ELL gather-matmul kernels vs the pure-jnp oracles in
+kernels/ref.py — shapes x sparsities x ranks, non-uniform row nnz
+(realized K_max padding), grid tilings, and the bytes-win routing rule
+that decides when unstructured decompositions leave the dense format."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.packing import (ELLPacked, ell_pack, ell_row_nnz_max,
+                                ell_unpack, ell_wins_bytes)
+from repro.core.sparsity import prune_mask
+from repro.kernels import ops, ref
+
+
+def _sparse(seed, n, k, density, uniform=True):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    w = jax.random.normal(ks[0], (n, k), jnp.float32) * 0.1
+    if uniform:
+        return jnp.where(prune_mask(jnp.abs(w), density), w, 0.0)
+    # Bernoulli mask: per-row nnz varies, exercising the K_max pad
+    mask = jax.random.bernoulli(ks[1], density, (n, k))
+    return jnp.where(mask, w, 0.0)
+
+
+def _uv(seed, n, k, rank):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    return (jax.random.normal(ks[0], (n, rank), jnp.float32) * 0.2,
+            jax.random.normal(ks[1], (k, rank), jnp.float32) * 0.2)
+
+
+def _bits(seed, n, k):
+    from repro.core.packing import pack_sign_bits
+    w_b = jnp.where(jax.random.bernoulli(jax.random.PRNGKey(seed),
+                                         0.5, (n, k)), 1, -1)
+    return pack_sign_bits(w_b.astype(jnp.int8))
+
+
+# ------------------------------------------------------------------
+# Packing format
+# ------------------------------------------------------------------
+
+def test_ell_pack_realized_kmax_roundtrip():
+    """Default nnz=None pads to the realized per-row max and the
+    unpack reproduces the matrix exactly — including short rows."""
+    ws = _sparse(0, 48, 96, 0.4, uniform=False)
+    p = ell_pack(ws)
+    assert p.indices.dtype == jnp.uint16
+    assert p.values.shape[1] == ell_row_nnz_max(ws)
+    np.testing.assert_allclose(np.asarray(ell_unpack(p)), np.asarray(ws))
+
+
+def test_ell_pack_rejects_wide_din():
+    with pytest.raises(ValueError, match="uint16"):
+        ell_pack(jnp.zeros((2, 2 ** 16 + 32), jnp.float32))
+
+
+def test_variant_routing_follows_pack_itemsize():
+    """The ELL-vs-dense race depends on the SERVING value width: a 50%
+    unstructured layer wins at f32 (0.75x) but ties at bf16 — so a bf16
+    pack must route it to sparse-dense, not sparse-ell."""
+    from repro.core.slab import SLaBDecomposition
+    from repro.core.packed_model import variant_of
+    ws = _sparse(20, 32, 64, 0.5)
+    dec = SLaBDecomposition(ws, jnp.zeros((32, 0)), jnp.zeros((64, 0)),
+                            jnp.zeros((0, 0), jnp.int8))
+    assert variant_of(dec, None, itemsize=4) == "sparse-ell"
+    assert variant_of(dec, None, itemsize=2) == "sparse-dense"
+
+
+def test_ell_wins_bytes_threshold():
+    """f32 values + uint16 ids: ELL wins iff K_max < 2/3 D_in; bf16
+    values tighten it to 1/2."""
+    assert ell_wins_bytes(85, 128, itemsize=4)       # 85*6 < 128*4
+    assert not ell_wins_bytes(86, 128, itemsize=4)   # 86*6 > 512
+    assert ell_wins_bytes(63, 128, itemsize=2)
+    assert not ell_wins_bytes(64, 128, itemsize=2)   # exact tie loses
+    assert not ell_wins_bytes(8, 2 ** 16 + 32, itemsize=4)  # uint16 cap
+
+
+# ------------------------------------------------------------------
+# Kernels vs refs vs dense oracle
+# ------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,k", [(64, 128), (96, 160), (128, 64)])
+@pytest.mark.parametrize("density", [0.2, 0.5])
+@pytest.mark.parametrize("uniform", [True, False],
+                         ids=["rows-uniform", "rows-ragged"])
+def test_ell_matmul_matches_ref_and_dense(n, k, density, uniform):
+    ws = _sparse(1, n, k, density, uniform)
+    p = ell_pack(ws)
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, k), jnp.float32)
+    got = ops.ell_matmul(x, p.values, p.indices, interpret=True)
+    want = ref.ell_matmul_ref(x, p.values, p.indices, k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(x @ ws.T),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("rank", [1, 3])
+def test_ell_lr_matmul_matches_ref(rank):
+    ws = _sparse(3, 96, 128, 0.4, uniform=False)
+    p = ell_pack(ws)
+    u, v = _uv(4, 96, 128, rank)
+    x = jax.random.normal(jax.random.PRNGKey(5), (8, 128), jnp.float32)
+    got = ops.ell_lr_matmul(x, p.values, p.indices, u, v, interpret=True)
+    want = ref.ell_lr_matmul_ref(x, p.values, p.indices, 128, u, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    dense = x @ ws.T + (x @ v) @ u.T
+    np.testing.assert_allclose(np.asarray(got), np.asarray(dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("rank", [1, 3])
+def test_slab_ell_matmul_matches_ref(rank):
+    ws = _sparse(6, 64, 160, 0.5, uniform=False)
+    p = ell_pack(ws)
+    u, v = _uv(7, 64, 160, rank)
+    bp = _bits(8, 64, 160)
+    x = jax.random.normal(jax.random.PRNGKey(9), (8, 160), jnp.float32)
+    got = ops.slab_ell_matmul(x, p.values, p.indices, bp, u, v,
+                              interpret=True)
+    want = ref.slab_ell_matmul_ref(x, p.values, p.indices, 160, bp, u, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ell_matmul_fori_chunk_path():
+    """A small jc forces the fori_loop chunking (the O(1)-trace path
+    used at realistic K_max) plus the static remainder tail; numerics
+    must match the single-chunk result exactly."""
+    from repro.kernels import ell as ell_k
+    ws = _sparse(16, 64, 128, 0.55, uniform=False)   # K_max ~ 70-ish
+    p = ell_pack(ws)
+    assert p.values.shape[1] // 4 > 4                # fori path engages
+    x = jax.random.normal(jax.random.PRNGKey(17), (8, 128), jnp.float32)
+    got = ell_k.ell_matmul(x, p.values, p.indices, jc=4, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ ws.T),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ell_matmul_multi_tile_grid():
+    """bn smaller than N and row padding (M not a block multiple)
+    tile correctly."""
+    ws = _sparse(10, 128, 96, 0.4)
+    p = ell_pack(ws)
+    x = jax.random.normal(jax.random.PRNGKey(11), (5, 96), jnp.float32)
+    got = ops.ell_matmul(x, p.values, p.indices, bm=2, bn=32,
+                         interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ ws.T),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ell_matmul_leading_batch_dims():
+    ws = _sparse(12, 64, 96, 0.3)
+    p = ell_pack(ws)
+    x = jax.random.normal(jax.random.PRNGKey(13), (2, 3, 96), jnp.float32)
+    got = ops.ell_matmul(x, p.values, p.indices, interpret=True)
+    assert got.shape == (2, 3, 64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ ws.T),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ell_all_zero_row_serves_zeros():
+    """A row with zero nnz pads to width ≥ 1 and contributes nothing."""
+    ws = _sparse(14, 32, 64, 0.4).at[3].set(0.0)
+    p = ell_pack(ws)
+    x = jax.random.normal(jax.random.PRNGKey(15), (4, 64), jnp.float32)
+    got = ops.ell_matmul(x, p.values, p.indices, interpret=True)
+    np.testing.assert_allclose(np.asarray(got[:, 3]), 0.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ ws.T),
+                               rtol=1e-4, atol=1e-4)

@@ -61,10 +61,16 @@ def test_mixed_plan_zero_dense_fallback(mixed_setup):
     assert rep.n_packed == n_lin
     assert rep.fallback == []
     # attn.{wq,wk,wv,wo} -> N:M sparsegpt; mlp.w_gate -> rank-4 hassle;
-    # mlp.{w_up,w_down} -> full SLaB
+    # mlp.{w_up,w_down} -> full SLaB. The unstructured sparse parts
+    # (keep ≈ 0.43-0.45 at CR 0.5) route to row-padded ELL — the format
+    # that finally beats dense bytes for them.
     assert rep.by_variant == {"sparse-nm": 4 * cfg.n_layers,
-                              "lowrank-dense": cfg.n_layers,
-                              "slab-dense": 2 * cfg.n_layers}
+                              "lowrank-ell": cfg.n_layers,
+                              "slab-ell": 2 * cfg.n_layers}
+    # every packed variant now stores fewer bytes than dense (the old
+    # slab-dense/lowrank-dense silently exceeded it)
+    for var, (pb, db) in rep.bytes_by_variant.items():
+        assert pb < db, (var, pb, db)
     # every (layer, path) stat carries its servable variant
     assert all(s.variant for s in stats)
 
@@ -79,7 +85,7 @@ def test_mixed_plan_fast_path_stays_scannable(mixed_setup):
     assert any(isinstance(l, PackedLinear) for l in leaves)
     assert not any(isinstance(l, PackedStack) for l in leaves)
     wg = packed["layers"]["mlp"]["w_gate"]
-    assert wg.variant == "lowrank-dense" and wg.rank == 4
+    assert wg.variant == "lowrank-ell" and wg.rank == 4
 
 
 def test_mixed_packed_forward_matches_dense(mixed_setup):
@@ -112,7 +118,7 @@ def test_acceptance_plan_serves_fully_packed():
         cfg, "attn.*=sparsegpt@pattern=2:4; mlp.*=hassle@rank=4; *=slab")
     assert rep.fallback == []
     assert rep.n_packed == cfg.n_layers * len(linear_paths(cfg))
-    assert set(rep.by_variant) == {"sparse-nm", "lowrank-dense"}
+    assert set(rep.by_variant) == {"sparse-nm", "lowrank-ell"}
     toks = jax.random.randint(jax.random.PRNGKey(6), (2, 8), 0, cfg.vocab)
     f_d, _ = lm.forward(cfg, dense_c, toks)
     f_p, _ = lm.forward(cfg, packed, toks)
@@ -147,7 +153,7 @@ def test_partial_coverage_and_mixed_patterns_pack(hetero_setup):
     assert isinstance(wq, PackedStack)
     assert wq.dense_members == (0,) and wq.members == ((1,),)
     assert isinstance(wq.at_layer(0), jax.Array)     # dense leaf
-    assert wq.at_layer(1).variant == "slab-dense"
+    assert wq.at_layer(1).variant == "slab-ell"
     wk = packed["layers"]["attn"]["wk"]
     assert isinstance(wk, PackedStack) and wk.dense is None
     pats = {g.m_pat for g in wk.groups}
@@ -218,7 +224,8 @@ def test_hybrid_hetero_decode_matches_dense():
 # Variant round-trips (packed_matmul == dense-applied decomposition)
 # ------------------------------------------------------------------
 
-def _dec(seed, n=64, k=128, *, sparse="dense", rank=0, binary=False):
+def _dec(seed, n=64, k=128, *, sparse="dense", rank=0, binary=False,
+         keep=0.4):
     ks = jax.random.split(jax.random.PRNGKey(seed), 4)
     w = jax.random.normal(ks[0], (n, k), jnp.float32) * 0.1
     if sparse is None:
@@ -226,7 +233,7 @@ def _dec(seed, n=64, k=128, *, sparse="dense", rank=0, binary=False):
     elif sparse == "nm":
         w_s = jnp.where(prune_mask(jnp.abs(w), 0.5, pattern="2:4"), w, 0.0)
     else:
-        w_s = jnp.where(prune_mask(jnp.abs(w), 0.4), w, 0.0)
+        w_s = jnp.where(prune_mask(jnp.abs(w), keep), w, 0.0)
     if rank:
         u = jax.random.normal(ks[1], (n, rank), jnp.float32) * 0.2
         v = jax.random.normal(ks[2], (k, rank), jnp.float32) * 0.2
@@ -244,13 +251,17 @@ def _dec(seed, n=64, k=128, *, sparse="dense", rank=0, binary=False):
 @pytest.mark.parametrize(
     "kw,pattern,variant",
     [(dict(sparse="nm", rank=2, binary=True), "2:4", "slab-nm"),
-     (dict(sparse="dense", rank=3, binary=True), None, "slab-dense"),
+     (dict(sparse="dense", rank=3, binary=True), None, "slab-ell"),
+     (dict(sparse="dense", rank=3, binary=True, keep=0.75), None,
+      "slab-dense"),
      (dict(sparse=None, rank=2, binary=True), None, "binlr"),
      (dict(sparse="nm", rank=4), "2:4", "lowrank-nm"),
-     (dict(sparse="dense", rank=4), None, "lowrank-dense"),
+     (dict(sparse="dense", rank=4), None, "lowrank-ell"),
+     (dict(sparse="dense", rank=4, keep=0.75), None, "lowrank-dense"),
      (dict(sparse=None, rank=3), None, "lowrank"),
      (dict(sparse="nm"), "2:4", "sparse-nm"),
-     (dict(sparse="dense"), None, "sparse-dense")],
+     (dict(sparse="dense"), None, "sparse-ell"),
+     (dict(sparse="dense", keep=0.75), None, "sparse-dense")],
     ids=lambda p: p if isinstance(p, str) else "")
 def test_variant_roundtrip(kw, pattern, variant):
     dec = _dec(11, **kw)
@@ -268,7 +279,7 @@ def test_binary_without_lowrank_serves_sparse_only():
     """W_L ⊙ W_B with empty W_L is identically zero (core.slab
     semantics): a lone binary term must not change the variant."""
     dec = _dec(13, sparse="dense", rank=0, binary=True)
-    assert variant_of(dec, None) == "sparse-dense"
+    assert variant_of(dec, None) == "sparse-ell"
     x = jax.random.normal(jax.random.PRNGKey(14), (4, 128), jnp.float32)
     got = packed_matmul(x, pack_linear(dec, None), interpret=True)
     np.testing.assert_allclose(np.asarray(got),
@@ -304,7 +315,7 @@ def test_sola_soft_prunes_on_wanda_support():
     hard = compressor_lib.get("sola", scfg, softness=0.0).compress(w, stats)
     np.testing.assert_allclose(np.asarray(hard.dense),
                                np.asarray(wanda.dense), rtol=1e-6)
-    assert variant_of(sola.dec, None) == "sparse-dense"
+    assert variant_of(sola.dec, None) == "sparse-ell"
 
 
 def test_sola_registered_and_plan_selectable():

@@ -1,0 +1,248 @@
+"""Segmented-scan heterogeneous serving: the layer axis of a mixed
+packed plan partitions into maximal contiguous same-signature runs
+(``segment_runs``), each driven by ONE ``lax.scan`` — numerics must
+match both the per-layer 'unrolled' segmentation and the dense-applied
+weights, and trace cost must be O(#segments), independent of depth."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.packed_model import (PackedStack, layer_slice_range,
+                                     segment_runs)
+from repro.models import lm
+from repro.models.common import positions_for
+
+from benchmarks.common import (per_layer_segments as _unrolled,
+                               synthetic_pruned_packed as _packed_prune)
+
+
+def _cfg(arch="stablelm_12b", **kw):
+    return configs.get(arch, smoke=True).with_(dtype=jnp.float32, **kw)
+
+
+def _decode_seq(cfg, params, toks, segments=None):
+    b, s = toks.shape
+    cache = lm.init_cache(cfg, b, s)
+    for t in range(s):
+        pos = positions_for(cfg, b, 1, offset=t)
+        logits, cache = lm.decode_step(cfg, params, cache,
+                                       toks[:, t:t + 1], pos,
+                                       segments=segments)
+    return logits, cache
+
+
+# ------------------------------------------------------------------
+# segment_runs unit behavior
+# ------------------------------------------------------------------
+
+def test_segment_runs_boundaries():
+    cfg = _cfg(n_layers=6)
+    _, packed, rep = _packed_prune(
+        cfg, lambda l: 0.25 if l < 3 else 0.5,
+        skip={(0, "attn.wq")})
+    # layer 0: attn.wq dense remainder; 1-2: keep .25 groups; 3-5: keep .5
+    assert segment_runs(packed["layers"], cfg.n_layers) == \
+        ((0, 1), (1, 3), (3, 6))
+    assert [(s.lo, s.hi) for s in rep.segments] == [(0, 1), (1, 3), (3, 6)]
+    descs = dict(rep.segments[0].sig)
+    assert descs["attn.wq"] == "dense"
+    assert dict(rep.segments[1].sig)["attn.wq"].startswith("sparse-ell")
+
+
+def test_segment_runs_homogeneous_is_one_run():
+    cfg = _cfg(n_layers=4)
+    _, packed, rep = _packed_prune(cfg, lambda l: 0.5)
+    assert segment_runs(packed["layers"], cfg.n_layers) == ((0, 4),)
+    assert len(rep.segments) == 1
+
+
+def test_packed_stack_segment_slices():
+    cfg = _cfg(n_layers=6)
+    _, packed, _ = _packed_prune(
+        cfg, lambda l: 0.25 if l < 3 else 0.5, skip={(0, "attn.wq")})
+    wq = packed["layers"]["attn"]["wq"]
+    assert isinstance(wq, PackedStack)
+    seg = wq.segment(1, 3)
+    assert seg.sparse_vals.shape[0] == 2
+    with pytest.raises(ValueError, match="straddle"):
+        wq.segment(2, 4)                      # crosses the keep boundary
+    # per-segment tree slices stack every leaf to the run length
+    sub = layer_slice_range(packed["layers"], 3, 6)
+    assert sub["attn"]["wq"].sparse_vals.shape[0] == 3
+    assert sub["attn_norm"].shape[0] == 3
+
+
+# ------------------------------------------------------------------
+# Parity: segmented == unrolled == dense (forward + decode)
+# ------------------------------------------------------------------
+
+def test_forward_segmented_matches_unrolled_and_dense():
+    cfg = _cfg(n_layers=6)
+    dense_c, packed, rep = _packed_prune(
+        cfg, lambda l: 0.25 if l < 3 else 0.5, skip={(0, "attn.wq")})
+    assert len(rep.segments) == 3
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    f_seg, _ = lm.forward(cfg, packed, toks)
+    f_unr, _ = lm.forward(cfg, packed, toks,
+                          segments=_unrolled(cfg.n_layers))
+    f_dense, _ = lm.forward(cfg, dense_c, toks)
+    np.testing.assert_allclose(np.asarray(f_seg), np.asarray(f_unr),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(f_seg), np.asarray(f_dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decode_segmented_matches_unrolled_and_dense():
+    cfg = _cfg(n_layers=6)
+    dense_c, packed, _ = _packed_prune(
+        cfg, lambda l: 0.25 if l < 3 else 0.5, skip={(0, "attn.wq")})
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 4), 0, cfg.vocab)
+    l_seg, c_seg = _decode_seq(cfg, packed, toks)
+    l_unr, c_unr = _decode_seq(cfg, packed, toks,
+                               segments=_unrolled(cfg.n_layers))
+    l_dense, _ = _decode_seq(cfg, dense_c, toks)
+    np.testing.assert_allclose(np.asarray(l_seg), np.asarray(l_unr),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l_seg), np.asarray(l_dense),
+                               rtol=1e-4, atol=1e-4)
+    # the per-segment cache concat restacks into the same stacked buffers
+    for a, b in zip(jax.tree.leaves(c_seg), jax.tree.leaves(c_unr)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.slow
+def test_ssm_decode_segmented_matches_dense():
+    """The fast tier already drives segmented SSM decode (decode_step's
+    only path) via test_hetero_packing; this adds the unrolled-equality
+    cross-check."""
+    cfg = _cfg("mamba2_1_3b", n_layers=4)
+    dense_c, packed, rep = _packed_prune(
+        cfg, lambda l: 0.5, skip={(0, "mamba.out")})
+    assert isinstance(packed["layers"]["mamba"]["out"], PackedStack)
+    assert len(rep.segments) == 2
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 3), 0, cfg.vocab)
+    l_seg, _ = _decode_seq(cfg, packed, toks)
+    l_unr, _ = _decode_seq(cfg, packed, toks,
+                           segments=_unrolled(cfg.n_layers))
+    l_dense, _ = _decode_seq(cfg, dense_c, toks)
+    np.testing.assert_allclose(np.asarray(l_seg), np.asarray(l_unr),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l_seg), np.asarray(l_dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.slow
+def test_hybrid_shared_block_segmented_matches_dense():
+    """zamba2: the shared transformer block fires inside a scanned
+    segment (lax.cond path) and its stacked KV caches update in place
+    across segment boundaries."""
+    cfg = _cfg("zamba2_7b", n_layers=6)       # shared block at L2, L5
+    dense_c, packed, rep = _packed_prune(
+        cfg, lambda l: 0.5, skip={(0, "mamba.out")})
+    assert len(rep.segments) == 2
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 3), 0, cfg.vocab)
+    f_seg, _ = lm.forward(cfg, packed, toks)
+    f_dense, _ = lm.forward(cfg, dense_c, toks)
+    np.testing.assert_allclose(np.asarray(f_seg), np.asarray(f_dense),
+                               rtol=1e-4, atol=1e-4)
+    l_seg, c_seg = _decode_seq(cfg, packed, toks)
+    l_unr, c_unr = _decode_seq(cfg, packed, toks,
+                               segments=_unrolled(cfg.n_layers))
+    l_dense, _ = _decode_seq(cfg, dense_c, toks)
+    np.testing.assert_allclose(np.asarray(l_seg), np.asarray(l_unr),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l_seg), np.asarray(l_dense),
+                               rtol=1e-4, atol=1e-4)
+    for a, b in zip(jax.tree.leaves(c_seg.shared_kv),
+                    jax.tree.leaves(c_unr.shared_kv)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------
+# Trace cost: O(#segments), not O(L)
+# ------------------------------------------------------------------
+
+def _fwd_traces(monkeypatch, cfg, packed):
+    calls = {"n": 0}
+    orig = lm._layer_fwd
+
+    def wrapper(*a, **k):
+        calls["n"] += 1
+        return orig(*a, **k)
+
+    toks = jnp.zeros((1, 4), jnp.int32)
+    with monkeypatch.context() as m:
+        m.setattr(lm, "_layer_fwd", wrapper)
+        jax.make_jaxpr(lambda p, t: lm.forward(cfg, p, t)[0])(packed, toks)
+    return calls["n"]
+
+
+def _decode_traces(monkeypatch, cfg, packed):
+    calls = {"n": 0}
+    orig = lm._layer_decode
+
+    def wrapper(*a, **k):
+        calls["n"] += 1
+        return orig(*a, **k)
+
+    cache = lm.init_cache(cfg, 1, 2)
+    tok = jnp.zeros((1, 1), jnp.int32)
+    pos = positions_for(cfg, 1, 1)
+    with monkeypatch.context() as m:
+        m.setattr(lm, "_layer_decode", wrapper)
+        jax.make_jaxpr(
+            lambda p, c, t: lm.decode_step(cfg, p, c, t, pos)[0])(
+                packed, cache, tok)
+    return calls["n"]
+
+
+def test_trace_count_scales_with_segments_not_depth(monkeypatch):
+    """The heterogeneous path traces one layer body per scan segment:
+    for a fixed segmentation shape the trace count is the 1-segment
+    cost times #segments, and DOESN'T grow with n_layers."""
+    keep3 = lambda l: 0.25 if l < 3 else 0.5         # noqa: E731
+    cfg6 = _cfg(n_layers=6)
+    _, packed6, rep6 = _packed_prune(cfg6, keep3, skip={(0, "attn.wq")})
+    assert len(rep6.segments) == 3
+    cfg1seg = _cfg(n_layers=6)
+    _, packed1, rep1 = _packed_prune(cfg1seg, lambda l: 0.5)
+    assert len(rep1.segments) == 1
+
+    per_scan = _fwd_traces(monkeypatch, cfg1seg, packed1)
+    assert per_scan >= 1                              # scan body cost
+    n6 = _fwd_traces(monkeypatch, cfg6, packed6)
+    assert n6 == 3 * per_scan
+
+    # depth independence: same 3-segment shape at double the depth
+    cfg12 = _cfg(n_layers=12)
+    _, packed12, rep12 = _packed_prune(cfg12, keep3, skip={(0, "attn.wq")})
+    assert len(rep12.segments) == 3
+    assert _fwd_traces(monkeypatch, cfg12, packed12) == n6
+
+    d6 = _decode_traces(monkeypatch, cfg6, packed6)
+    d12 = _decode_traces(monkeypatch, cfg12, packed12)
+    assert d6 == d12 == 3 * _decode_traces(monkeypatch, cfg1seg, packed1)
+
+
+@pytest.mark.slow
+def test_trace_count_full_depth_mixed_plan(monkeypatch):
+    """Full-depth acceptance property: a 24-layer mixed plan with 3
+    signature runs compiles O(#segments) layer bodies — strictly fewer
+    than the O(L) the old unrolled path paid."""
+    keep3 = lambda l: 0.25 if l < 8 else 0.5         # noqa: E731
+    cfg = _cfg(n_layers=24)
+    _, packed, rep = _packed_prune(cfg, keep3, skip={(0, "attn.wq")})
+    assert len(rep.segments) == 3
+    cfg1 = _cfg(n_layers=4)
+    _, packed1, _ = _packed_prune(cfg1, lambda l: 0.5)
+    per_scan = _fwd_traces(monkeypatch, cfg1, packed1)
+
+    n = _fwd_traces(monkeypatch, cfg, packed)
+    assert n == 3 * per_scan
+    assert n < cfg.n_layers                          # O(#segments) ≪ L
+    d = _decode_traces(monkeypatch, cfg, packed)
+    assert d < cfg.n_layers

@@ -18,8 +18,8 @@ from repro.core.sparsity import prune_mask
 from repro.kernels import ref
 
 N, K = 64, 128          # K divisible by 32 (sign bits), 4 and 8 (N:M)
-_HAS_LOWRANK = ("slab-nm", "slab-dense", "binlr", "lowrank-nm",
-                "lowrank-dense", "lowrank")
+_HAS_LOWRANK = ("slab-nm", "slab-ell", "slab-dense", "binlr",
+                "lowrank-nm", "lowrank-ell", "lowrank-dense", "lowrank")
 
 
 def _dec(seed, variant, rank, pattern):
@@ -31,7 +31,10 @@ def _dec(seed, variant, rank, pattern):
         w_s = jnp.where(prune_mask(jnp.abs(w), 0.4, pattern=pattern),
                         w, 0.0)
     else:
-        w_s = jnp.where(prune_mask(jnp.abs(w), 0.4), w, 0.0)
+        # unstructured: keep 0.4 routes to ELL (bytes win); keep 0.75
+        # exceeds the K_max < 2/3·K f32 threshold and stays dense
+        keep = 0.4 if variant.endswith("-ell") else 0.75
+        w_s = jnp.where(prune_mask(jnp.abs(w), keep), w, 0.0)
     if rank:
         u = jax.random.normal(ks[1], (N, rank), jnp.float32) * 0.2
         v = jax.random.normal(ks[2], (K, rank), jnp.float32) * 0.2
@@ -52,6 +55,9 @@ def _ref_oracle(x, pl):
     if pl.variant == "slab-nm":
         return ref.slab_nm_matmul_ref(x, pl.sparse_vals, pl.sparse_idx,
                                       pl.m_pat, pl.b_packed, pl.u, pl.v)
+    if pl.variant == "slab-ell":
+        return ref.slab_ell_matmul_ref(x, pl.sparse_vals, pl.sparse_idx,
+                                       pl.d_in, pl.b_packed, pl.u, pl.v)
     if pl.variant == "slab-dense":
         return ref.slab_matmul_ref(x, pl.sparse_vals, pl.b_packed,
                                    pl.u, pl.v)
@@ -60,6 +66,9 @@ def _ref_oracle(x, pl):
     if pl.variant == "lowrank-nm":
         return ref.slab_nm_lr_matmul_ref(x, pl.sparse_vals, pl.sparse_idx,
                                          pl.m_pat, pl.u, pl.v)
+    if pl.variant == "lowrank-ell":
+        return ref.ell_lr_matmul_ref(x, pl.sparse_vals, pl.sparse_idx,
+                                     pl.d_in, pl.u, pl.v)
     if pl.variant == "lowrank-dense":
         return ref.slab_lr_matmul_ref(x, pl.sparse_vals, pl.u, pl.v)
     if pl.variant == "lowrank":
@@ -67,6 +76,9 @@ def _ref_oracle(x, pl):
     if pl.variant == "sparse-nm":
         return ref.nm_matmul_ref(x, pl.sparse_vals, pl.sparse_idx,
                                  pl.m_pat)
+    if pl.variant == "sparse-ell":
+        return ref.ell_matmul_ref(x, pl.sparse_vals, pl.sparse_idx,
+                                  pl.d_in)
     assert pl.variant == "sparse-dense"
     return x.astype(jnp.float32) @ pl.sparse_vals.astype(jnp.float32).T
 
