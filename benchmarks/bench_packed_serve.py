@@ -1,6 +1,7 @@
-"""Packed vs dense serving: tokens/s, trace cost, and bytes-per-linear.
+"""Packed vs dense serving: tokens/s, trace cost, bytes-per-linear,
+and tensor-parallel tokens/s per mesh size.
 
-The perf trajectory for the heterogeneous packed-serving path. Three
+The perf trajectory for the heterogeneous packed-serving path. Four
 measurements:
 
   1. **tokens/s** on the PR-4 smoke config (stablelm-12b-smoke, mixed
@@ -17,6 +18,13 @@ measurements:
      (from PackReport.bytes_by_variant). With ELL routing every variant
      of this plan beats dense bytes — the old silent >1.0x on
      slab-dense/lowrank-dense is gone.
+  4. **mesh tokens/s** (``mesh_tokens_per_s``): packed decode under a
+     (1, model) device mesh at model=1/2/4, measured in ONE subprocess
+     with 4 fake CPU devices (planner-placed packed leaves +
+     ``use_mesh``), plus the no-mesh baseline from the same process so
+     the rates are comparable. On 1 physical CPU core more shards can't
+     go faster — the row is a correctness-under-mesh + overhead
+     tracker; the scaling story needs a real TPU.
 
 CPU caveat: the Pallas kernels run in interpret mode here, so absolute
 packed tokens/s is NOT meaningful off-TPU — the bytes and trace-cost
@@ -91,6 +99,67 @@ def _synthetic_packed(cfg):
     return packed, rep
 
 
+MESH_SIZES = (1, 2, 4)
+
+
+def _mesh_inline():
+    """(subprocess entry) Packed decode tok/s without a mesh and under
+    (1, model) meshes for each MESH_SIZES — one process, alternating
+    best-of passes, JSON on the last stdout line."""
+    import json
+
+    from repro.core.packed_model import merge_packed_axes
+    from repro.runtime.meshctx import use_mesh
+    from repro.runtime.sharding import Planner
+
+    cfg = configs.get(ARCH, smoke=True).with_(dtype=jnp.float32)
+    # homogeneous 50%-keep pruning: every linear path packs to ONE
+    # stacked sparse-ell PackedLinear — the single-segment decode path
+    _, packed, _ = synthetic_pruned_packed(cfg, lambda l: 0.5)
+    axes = lm.param_axes(cfg)
+
+    steppers = {"nomesh": _decode_stepper(cfg, packed)}
+    for m in MESH_SIZES:
+        mesh = jax.make_mesh((1, m), ("data", "model"))
+        planner = Planner(mesh, cfg)
+        placed = jax.device_put(
+            packed, planner.tree_shardings(
+                merge_packed_axes(axes, packed), packed))
+        base = _decode_stepper(cfg, placed)
+
+        def one_pass(base=base, mesh=mesh):
+            with use_mesh(mesh):
+                return base()
+
+        steppers[f"model={m}"] = one_pass
+
+    rates = _decode_toks_per_s(steppers)
+    rates["devices"] = jax.device_count()
+    print(json.dumps(rates))
+
+
+def _mesh_toks_per_s():
+    """Run ``_mesh_inline`` under 4 fake CPU devices (a subprocess so
+    the fake device count never leaks into this process's runtime)."""
+    import json
+    import os
+    import subprocess
+    import sys
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(repo, "src"),
+               XLA_FLAGS="--xla_force_host_platform_device_count="
+                         f"{max(MESH_SIZES)}")
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "from benchmarks.bench_packed_serve import _mesh_inline; "
+         "_mesh_inline()"],
+        env=env, cwd=repo, capture_output=True, text=True, timeout=1200)
+    if out.returncode != 0:
+        raise RuntimeError(f"mesh bench failed:\n{out.stderr[-4000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
 def _lower_seconds(cfg, params, segments=None) -> float:
     cache = lm.init_cache(cfg, BATCH, 2)
     tok = jnp.zeros((BATCH, 1), jnp.int32)
@@ -135,6 +204,8 @@ def run():
     lower_unr = _lower_seconds(cfg_deep, packed_deep,
                                segments=per_layer_segments(DEPTH))
 
+    mesh_rates = _mesh_toks_per_s()
+
     rows = {
         "arch": cfg.name,
         "plan": PLAN,
@@ -145,6 +216,7 @@ def run():
         "by_variant": rep.by_variant,
         "n_segments": len(rep.segments),
         "tokens_per_s": rates,
+        "mesh_tokens_per_s": mesh_rates,
         "trace_lower_s": {"n_layers": DEPTH,
                           "n_segments": len(rep_deep.segments),
                           "segmented": lower_seg,
@@ -158,7 +230,10 @@ def run():
 def check(rows) -> bool:
     """Every linear packs; every byte-reducing variant (N:M, ELL,
     binlr, lowrank) actually beats its dense bytes; the segmented path
-    traces faster than the per-layer unrolled equivalent at depth."""
+    traces faster than the per-layer unrolled equivalent at depth; a
+    tokens/s row exists per mesh size and the model=1 mesh costs at
+    most modest overhead over the no-mesh path (loose bound — this
+    box's timings are noisy)."""
     ok = rows["dense_fallback"] == 0 and rows["n_packed"] > 0
     ok = ok and "sparse-ell" in rows["variants"]
     for var, agg in rows["variants"].items():
@@ -167,6 +242,10 @@ def check(rows) -> bool:
             ok = ok and agg["bytes_ratio"] < 1.0
     tl = rows["trace_lower_s"]
     ok = ok and tl["segmented"] < tl["unrolled"]
+    mesh = rows["mesh_tokens_per_s"]
+    for m in MESH_SIZES:
+        ok = ok and mesh.get(f"model={m}", 0.0) > 0.0
+    ok = ok and mesh["model=1"] >= 0.6 * mesh["nomesh"]
     return ok
 
 

@@ -19,6 +19,13 @@
 #                               # solver, @auto plans, plan DSL
 #                               # round-trips, cross-variant kernel
 #                               # parity sweep
+#   scripts/tier1.sh distributed # tensor-parallel packed-serving loop:
+#                               # per-variant Planner specs, segment
+#                               # pre-slicing, decode parity under a
+#                               # real 2-device mesh (2 fake CPU
+#                               # devices; the 8-device subprocess
+#                               # suite stays @slow in
+#                               # tests/test_distributed.py)
 #   scripts/tier1.sh <pytest args...>   # anything else passes through
 #
 # The full suite (the tier-1 gate, incl. @slow) stays:
@@ -47,6 +54,13 @@ if [ "${1:-}" = "packed" ]; then
         tests/test_kernels.py tests/test_packed_serving.py \
         tests/test_hetero_packing.py tests/test_variant_parity.py \
         tests/test_ell_kernels.py tests/test_segmented_scan.py "$@"
+fi
+
+if [ "${1:-}" = "distributed" ]; then
+    shift
+    exec env XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+        python -m pytest -q -m "not slow" \
+        tests/test_packed_sharding.py "$@"
 fi
 
 if [ "${1:-}" = "allocator" ]; then

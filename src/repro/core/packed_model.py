@@ -66,13 +66,20 @@ import jax.numpy as jnp
 from repro.core.packing import (ell_pack, ell_row_nnz_max, ell_wins_bytes,
                                 pack_nm, pack_sign_bits)
 from repro.core.slab import SLaBDecomposition
-from repro.models.common import tap_record
+from repro.models.common import is_axes_leaf, tap_record
 
 Array = jax.Array
 
 PACKED_VARIANTS = ("slab-nm", "slab-ell", "slab-dense", "binlr",
                    "lowrank-nm", "lowrank-ell", "lowrank-dense", "lowrank",
                    "sparse-nm", "sparse-ell", "sparse-dense")
+
+# Rank threshold for sharding the low-rank u factor on "model": below
+# this the (D_out, r) plane is a few KB and replicating it beats paying
+# a collective for the rank-r correction; at/above it u row-shards with
+# the other d_out planes. v (D_in, r) always replicates — it contracts
+# against the (replicated) input features.
+LR_SHARD_RANK = 8
 
 
 @jax.tree_util.register_pytree_node_class
@@ -157,23 +164,51 @@ class PackedStack:
         leaf = self.segment(l, l + 1)
         return jax.tree.map(lambda a: a[0], leaf)
 
+    def _seg_cache(self) -> dict:
+        """Per-instance memo of pre-sliced segment leaves. Lives outside
+        the pytree (plain attribute on the frozen dataclass), so slicing
+        each run happens ONCE per stack instance instead of at every
+        trace — the scan body then carries no layer-axis slicing at all.
+        Tracer leaves are never cached (a stack passed as a jit argument
+        would otherwise leak its tracers past the trace)."""
+        c = self.__dict__.get("_segcache")
+        if c is None:
+            c = {}
+            object.__setattr__(self, "_segcache", c)
+        return c
+
     def segment(self, lo: int, hi: int):
         """The stacked leaf for the contiguous layer run [lo, hi): a
         (hi-lo)-stacked PackedLinear or dense weight stack. The run must
         lie inside ONE group (or the dense remainder) — guaranteed for
         runs produced by ``segment_runs``; membership tuples are sorted,
-        so in-group runs are contiguous slices of the stacked arrays."""
+        so in-group runs are contiguous slices of the stacked arrays.
+        A run covering an entire group returns that group's stack
+        unsliced (identity — no copy), and concrete slices are memoized
+        per instance (``_seg_cache``)."""
+        cache = self._seg_cache()
+        out = cache.get((lo, hi))
+        if out is not None:
+            return out
         gi = self.owner_group(lo)
         if gi < 0:
             i = self.dense_members.index(lo)
             if self.dense_members[i:i + hi - lo] != tuple(range(lo, hi)):
                 raise ValueError(f"layers [{lo},{hi}) straddle groups")
-            return self.dense[i:i + hi - lo]
-        mem = self.members[gi]
-        i = mem.index(lo)
-        if mem[i:i + hi - lo] != tuple(range(lo, hi)):
-            raise ValueError(f"layers [{lo},{hi}) straddle groups")
-        return jax.tree.map(lambda a: a[i:i + hi - lo], self.groups[gi])
+            out = (self.dense if len(self.dense_members) == hi - lo
+                   else self.dense[i:i + hi - lo])
+        else:
+            mem = self.members[gi]
+            i = mem.index(lo)
+            if mem[i:i + hi - lo] != tuple(range(lo, hi)):
+                raise ValueError(f"layers [{lo},{hi}) straddle groups")
+            out = (self.groups[gi] if len(mem) == hi - lo
+                   else jax.tree.map(lambda a: a[i:i + hi - lo],
+                                     self.groups[gi]))
+        if not any(isinstance(a, jax.core.Tracer)
+                   for a in jax.tree.leaves(out)):
+            cache[(lo, hi)] = out
+        return out
 
     def variant_counts(self) -> Dict[str, int]:
         out: Dict[str, int] = {}
@@ -232,14 +267,101 @@ def segment_runs(tree, n_layers: int) -> Tuple[Tuple[int, int], ...]:
 def layer_slice_range(tree, lo: int, hi: int):
     """Restrict a stacked layers tree to the contiguous run [lo, hi),
     resolving PackedStack leaves to their per-segment stacked form.
-    Every leaf keeps a leading layer dim of hi-lo, so the result scans."""
+    Every leaf keeps a leading layer dim of hi-lo, so the result scans.
+    A run spanning a leaf's full layer axis passes it through unsliced
+    (identity — the homogeneous one-segment path copies nothing)."""
     def f(x):
         if isinstance(x, PackedStack):
             return x.segment(lo, hi)
         if isinstance(x, PackedLinear):
+            leaves = jax.tree.leaves(x)
+            if lo == 0 and leaves and leaves[0].shape[0] == hi:
+                return x
             return jax.tree.map(lambda a: a[lo:hi], x)
+        if lo == 0 and x.shape[0] == hi:
+            return x
         return x[lo:hi]
     return jax.tree.map(f, tree, is_leaf=_is_packed_leaf)
+
+
+# ------------------------------------------------------------------
+# Logical axes for the sharding planner (tensor-parallel serving)
+# ------------------------------------------------------------------
+
+def _stack_depth(pl: PackedLinear) -> int:
+    """0 for a per-layer PackedLinear, 1 for a layer-stacked one."""
+    if pl.sparse_vals is not None:
+        base = 3 if pl.variant.endswith("-nm") else 2
+        return pl.sparse_vals.ndim - base
+    a = pl.u if pl.u is not None else pl.b_packed
+    return a.ndim - 2
+
+
+def packed_linear_axes(pl: PackedLinear, stacked: bool = False,
+                       lr_shard_rank: int = LR_SHARD_RANK
+                       ) -> PackedLinear:
+    """The logical-axes tree of one packed linear: a PackedLinear with
+    IDENTICAL static aux whose children are axes tuples, so it pairs
+    structurally against the array tree in ``Planner.tree_specs`` /
+    ``jax.tree.map``. Every stored plane except ``v`` leads with d_out
+    — N:M values/indices ``(D_out, D_in/m, n)``, ELL planes ``(D_out,
+    K_max)``, dense-masked values ``(D_out, D_in)``, sign bits
+    ``(D_out, D_in/32)``, ``u (D_out, r)`` — so tensor parallelism is
+    uniform row sharding on ``"packed_out"`` (-> "model"). N:M groups
+    and ELL rows run along d_in and are never split by a d_out shard;
+    a d_out that doesn't divide the mesh replicates via the planner's
+    standard divisibility fallback (degraded-but-correct). ``u`` only
+    shards at rank >= ``lr_shard_rank``; ``v (D_in, r)`` always
+    replicates (it contracts the replicated input features)."""
+    lead = ("layers",) if stacked else ()
+
+    def ax(a, row_sharded=True):
+        if a is None:
+            return None
+        nd = a.ndim - len(lead)
+        first = "packed_out" if row_sharded else None
+        return lead + (first,) + (None,) * (nd - 1)
+
+    return PackedLinear(
+        ax(pl.sparse_vals), ax(pl.sparse_idx), ax(pl.b_packed),
+        ax(pl.u, pl.rank >= lr_shard_rank), ax(pl.v, False),
+        variant=pl.variant, m_pat=pl.m_pat, d_in=pl.d_in,
+        d_out=pl.d_out, rank=pl.rank)
+
+
+def packed_stack_axes(ps: PackedStack,
+                      lr_shard_rank: int = LR_SHARD_RANK) -> PackedStack:
+    """Axes tree of a PackedStack: per-group stacked PackedLinear axes
+    plus ``("layers", None, "packed_out")`` for the dense remainder
+    (model-orientation ``(run, D_in, D_out)`` — output dim last)."""
+    groups = tuple(packed_linear_axes(g, stacked=True,
+                                      lr_shard_rank=lr_shard_rank)
+                   for g in ps.groups)
+    dense = ("layers", None, "packed_out") if ps.dense is not None else None
+    return PackedStack(groups, dense, ps.members, ps.dense_members,
+                       ps.n_layers)
+
+
+def packed_axes(leaf, lr_shard_rank: int = LR_SHARD_RANK):
+    """Axes tree for any packed leaf (PackedLinear or PackedStack)."""
+    if isinstance(leaf, PackedStack):
+        return packed_stack_axes(leaf, lr_shard_rank)
+    return packed_linear_axes(leaf, stacked=_stack_depth(leaf) > 0,
+                              lr_shard_rank=lr_shard_rank)
+
+
+def merge_packed_axes(axes_tree, params_tree):
+    """Substitute per-variant packed axes subtrees into a dense logical-
+    axes tree (``lm.param_axes``) wherever ``params_tree`` holds a
+    packed leaf. The result feeds ``Planner.tree_specs`` /
+    ``tree_shardings`` unchanged: an axes-PackedLinear node pairs
+    against the array PackedLinear structurally (same aux), and its
+    tuple children stop descent exactly like plain dense axes leaves."""
+    def f(ax, leaf):
+        if _is_packed_leaf(leaf):
+            return packed_axes(leaf)
+        return ax
+    return jax.tree.map(f, axes_tree, params_tree, is_leaf=is_axes_leaf)
 
 
 # ------------------------------------------------------------------
@@ -351,13 +473,30 @@ def _pick_block(dim: int, cap: int, mult: int = 1) -> int:
     return dim
 
 
+def _local_dim(dim: int) -> int:
+    """The per-shard extent of a "packed_out" dim under the ambient
+    mesh: block-size picking must see what one device actually holds,
+    or the kernel grid can't partition along the sharded rows (a block
+    spanning two shards forces GSPMD to gather the whole plane). Any
+    divisor of dim // n_model also divides dim, so the grid stays valid
+    for the global shape; without a mesh (or a non-dividing d_out,
+    which replicates) this is the identity and block choices are
+    byte-identical to the single-device path."""
+    from repro.runtime.meshctx import current_mesh
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return dim
+    n = mesh.shape["model"]
+    return dim // n if (n > 1 and dim % n == 0) else dim
+
+
 def packed_matmul(x: Array, w: PackedLinear,
                   interpret: Optional[bool] = None) -> Array:
     """x (..., D_in) @ Wᵀ through the variant's fused kernel."""
     from repro.kernels import ops
     var = w.variant
     if var.endswith("-ell"):
-        kw = dict(bm=128, bn=_pick_block(w.d_out, 256),
+        kw = dict(bm=128, bn=_pick_block(_local_dim(w.d_out), 256),
                   interpret=interpret)
         if var == "sparse-ell":
             y = ops.ell_matmul(x, w.sparse_vals, w.sparse_idx, **kw)
@@ -369,7 +508,7 @@ def packed_matmul(x: Array, w: PackedLinear,
                                     w.b_packed, w.u, w.v, **kw)
         return y.astype(x.dtype)
     mult = (w.m_pat or 1) * (32 if (w.b_packed is not None) else 1)
-    kw = dict(bm=128, bn=_pick_block(w.d_out, 256),
+    kw = dict(bm=128, bn=_pick_block(_local_dim(w.d_out), 256),
               bk=_pick_block(w.d_in, 1024, mult), interpret=interpret)
     if var == "slab-nm":
         y = ops.slab_nm_matmul(x, w.sparse_vals, w.sparse_idx, w.m_pat,
@@ -401,6 +540,11 @@ def packed_matmul(x: Array, w: PackedLinear,
     return y.astype(x.dtype)
 
 
+# q/k/v projections: output is a flat head*dh dim that the attention
+# layers immediately reshape per head — never constrain it flat.
+_FLAT_HEAD_TAPS = frozenset(("wq", "wk", "wv"))
+
+
 def linear(x: Array, w, tap: Optional[str] = None) -> Array:
     """Dispatch point used by the model layers: dense `x @ w` or the
     packed fused kernel. ``tap`` names this linear for activation
@@ -410,7 +554,23 @@ def linear(x: Array, w, tap: Optional[str] = None) -> Array:
     if tap is not None:
         tap_record(tap, x)
     if isinstance(w, PackedLinear):
-        return packed_matmul(x, w)
+        from repro.runtime.meshctx import hint
+        y = packed_matmul(x, w)
+        if tap in _FLAT_HEAD_TAPS:
+            # q/k/v leave here flat (B, S, heads*dh) and are
+            # immediately re-laid-out per head; pinning the flat dim
+            # fights the head layout across the decode cache update
+            # and miscompiles under SPMD with the interpret-mode
+            # kernel (the mesh parity tests in tests/test_distributed
+            # caught real wrong logits) — leave them to propagation.
+            return y
+        # the packed-TP layout: every stored plane row-shards on d_out,
+        # so each device owns whole output rows and the result is
+        # "model"-sharded on its feature dim — one constraint per
+        # packed linear, mirroring the dense TP layout. hint() no-ops
+        # without a mesh and falls back when d_out doesn't divide
+        # (replicated degraded path).
+        return hint(y, *(None,) * (y.ndim - 1), "model")
     return x @ w
 
 
@@ -493,7 +653,8 @@ def pack_plan_decs(params: dict,
                    decs: Dict[Tuple[int, str], SLaBDecomposition],
                    n_layers: int, plan,
                    dtype=jnp.float32,
-                   variants: Optional[Dict[Tuple[int, str], str]] = None
+                   variants: Optional[Dict[Tuple[int, str], str]] = None,
+                   planner=None
                    ) -> Tuple[dict, PackReport]:
     """Pack EVERY servable decomposition of a (possibly mixed-method)
     plan — mixed variants, mixed N:M patterns, mixed ranks, and partial
@@ -512,7 +673,14 @@ def pack_plan_decs(params: dict,
     use different rules pack fine. ``variants`` optionally supplies the
     per-(layer, path) classification the pipeline already computed
     (``CompressStats.variant``; "" = unservable) so the per-linear
-    ``variant_of`` device sync isn't paid twice. Returns
+    ``variant_of`` device sync isn't paid twice.
+
+    ``planner`` (a ``runtime.sharding.Planner``) makes packing mesh-
+    aware: each packed leaf is placed with the NamedShardings of its
+    per-variant axes tree (``packed_axes``) the moment it is built —
+    leaves are *born sharded* instead of replicated then resharded —
+    and the per-segment slice cache is warmed after placement, so the
+    pre-sliced scan inputs carry the shards too. Returns
     (params, PackReport); a warning is emitted for any packed variant
     whose measured bytes exceed its dense footprint."""
     from repro.core.pipeline import _get, _set
@@ -587,6 +755,12 @@ def pack_plan_decs(params: dict,
                      if missing else None)
             leaf = PackedStack(tuple(stacked_groups), dense,
                                tuple(members), missing, n_layers)
+        if planner is not None:
+            # pack AFTER placement: the leaf materializes with its
+            # per-variant NamedShardings rather than being replicated
+            # first and resharded by the first constrained step
+            leaf = jax.device_put(
+                leaf, planner.tree_shardings(packed_axes(leaf), leaf))
         _set(out["layers"], name, leaf)
         packed_paths.append(name)
 
@@ -600,6 +774,15 @@ def pack_plan_decs(params: dict,
                 " — this format loses on the serving roofline",
                 stacklevel=2)
     segments = _model_segments(out["layers"], n_layers, packed_paths)
+    # pre-slice every (stack, run) pair once, at pack time: decode-step
+    # traces then reuse the memoized (and, under a planner, sharded)
+    # segment leaves instead of re-slicing the layer axis per trace
+    stacks = [l for l in jax.tree.leaves(out["layers"],
+                                         is_leaf=_is_packed_leaf)
+              if isinstance(l, PackedStack)]
+    for seg in segments:
+        for s in stacks:
+            s.segment(seg.lo, seg.hi)
     return out, PackReport(n_packed, by_variant, packed_paths,
                            sorted(fallback, key=lambda k: (k[1], k[0])),
                            segments, per_linear)

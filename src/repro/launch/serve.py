@@ -44,24 +44,54 @@ from repro.models.common import positions_for
 
 
 def greedy_decode(cfg, params, prompts: jnp.ndarray, gen_len: int):
+    """Prefill + greedy generation in TWO dispatches: one ``lax.scan``
+    over the prompt positions (the cache tracks its own write offset,
+    so scanning the decode step is semantically identical to the old
+    token-by-token Python loop — without its O(prompt_len) dispatch
+    overhead) and one scanned generation loop. Runs under the ambient
+    mesh (``meshctx.use_mesh``) when the caller entered one."""
     b, s = prompts.shape
     s_max = s + gen_len
     cache = lm.init_cache(cfg, b, s_max)
-    dec = jax.jit(lambda c, t, p: lm.decode_step(cfg, params, c, t, p))
 
-    # prefill token-by-token through the decode path (exercises the cache
-    # exactly as production would; a fused prefill is launch-side work)
-    tok = prompts[:, :1]
-    logits = None
-    for t in range(s):
-        pos = positions_for(cfg, b, 1, offset=t)
-        logits, cache = dec(cache, prompts[:, t:t + 1], pos)
-    out = [jnp.argmax(logits[:, -1], -1)]
-    for t in range(s, s + gen_len - 1):
-        pos = positions_for(cfg, b, 1, offset=t)
-        logits, cache = dec(cache, out[-1][:, None], pos)
-        out.append(jnp.argmax(logits[:, -1], -1))
-    return jnp.stack(out, axis=1)
+    def step(cache, tok, pos):
+        return lm.decode_step(cfg, params, cache, tok, pos)
+
+    @jax.jit
+    def prefill(cache, prompts, pos_all, logits0):
+        def body(carry, xs):
+            c, _ = carry
+            tok, pos = xs
+            pos = pos[:, None] if pos.ndim == 1 else pos[:, None, :]
+            logits, c = step(c, tok[:, None], pos)
+            return (c, logits[:, -1]), None
+        xs = (jnp.moveaxis(prompts, 1, 0),
+              jnp.moveaxis(pos_all, 1, 0))
+        (cache, logits), _ = jax.lax.scan(body, (cache, logits0), xs)
+        return cache, logits
+
+    @jax.jit
+    def generate(cache, last_logits):
+        first = jnp.argmax(last_logits, -1)
+
+        def body(carry, t):
+            cache, tok = carry
+            pos = positions_for(cfg, b, 1, offset=t)
+            logits, cache = step(cache, tok[:, None], pos)
+            nxt = jnp.argmax(logits[:, -1], -1)
+            return (cache, nxt), nxt
+
+        (cache, _), rest = jax.lax.scan(
+            body, (cache, first), jnp.arange(s, s + gen_len - 1))
+        return jnp.concatenate([first[:, None],
+                                jnp.moveaxis(rest, 0, 1)], axis=1)
+
+    sd = jax.eval_shape(step, cache, prompts[:, :1],
+                        positions_for(cfg, b, 1))[0]
+    logits0 = jnp.zeros((b, cfg.vocab), sd.dtype)
+    cache, last_logits = prefill(cache, prompts,
+                                 positions_for(cfg, b, s), logits0)
+    return generate(cache, last_logits)
 
 
 def main():
@@ -87,6 +117,12 @@ def main():
     ap.add_argument("--packed", action="store_true",
                     help="serve through the fused Pallas kernels (SLaB "
                          "on-HBM format; interpret mode on CPU)")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="run prefill+decode under a (data, model) "
+                         "device mesh, e.g. --mesh 1,4: weights are "
+                         "planner-placed and packed leaves are born "
+                         "with their per-variant NamedShardings "
+                         "(docs/packed_serving.md §Sharding)")
     ap.add_argument("--cr", type=float, default=0.5)
     ap.add_argument("--pattern", default=None)
     ap.add_argument("--iters", type=int, default=8)
@@ -102,8 +138,20 @@ def main():
     args = ap.parse_args()
 
     cfg = configs.get(args.arch, smoke=args.smoke)
-    params, _ = lm.init(cfg, jax.random.PRNGKey(args.seed))
+    params, axes = lm.init(cfg, jax.random.PRNGKey(args.seed))
     print(f"{cfg.name}: {lm.param_count(cfg)/1e6:.2f}M params")
+
+    mesh, planner = None, None
+    if args.mesh:
+        from repro.runtime.sharding import Planner
+        d, m = (int(x) for x in args.mesh.split(","))
+        if d * m > jax.device_count():
+            ap.error(f"--mesh {args.mesh} needs {d * m} devices, have "
+                     f"{jax.device_count()} (CPU: set XLA_FLAGS="
+                     f"--xla_force_host_platform_device_count={d * m})")
+        mesh = jax.make_mesh((d, m), ("data", "model"))
+        planner = Planner(mesh, cfg)
+        print(f"mesh: data={d} x model={m} over {d * m} devices")
 
     scfg = SLaBConfig(cr=args.cr, pattern=args.pattern, iters=args.iters)
     plan = (CompressionPlan.parse(args.plan, base=scfg)
@@ -151,6 +199,11 @@ def main():
                 print(f"{s.layer:>5}  {s.name:<20} {s.method:<10} "
                       f"{s.cr_requested:>7.3f} {s.cr:>7.3f} "
                       f"{s.err_before:>11.4g} {s.err_after:>10.4g}")
+        if planner is not None:
+            # place the (dense-equivalent) weights BEFORE packing so
+            # packed leaves are born on the mesh, not resharded after
+            params = jax.device_put(
+                params, planner.tree_shardings(axes, params))
         if args.packed:
             from repro.core.packed_model import pack_plan_decs
             eff_plan = (plan if plan is not None
@@ -158,7 +211,8 @@ def main():
                                                    base=scfg))
             params, rep = pack_plan_decs(
                 params, out[2], cfg.n_layers, eff_plan, dtype=cfg.dtype,
-                variants={(s.layer, s.name): s.variant for s in stats})
+                variants={(s.layer, s.name): s.variant for s in stats},
+                planner=planner)
             if rep.n_packed:
                 variants = " ".join(
                     f"{v}={c}" for v, c in sorted(rep.by_variant.items()))
@@ -184,11 +238,19 @@ def main():
                 print("--packed: plan produced no packable "
                       "decompositions; serving dense-equivalent weights")
 
+    else:
+        if planner is not None:
+            params = jax.device_put(
+                params, planner.tree_shardings(axes, params))
+
+    from repro.runtime.meshctx import use_mesh
     corpus = SyntheticCorpus(cfg.vocab, seed=args.seed)
     prompts = jnp.asarray(
         corpus.batch(0, args.batch, args.prompt_len)["inputs"])
     t0 = time.monotonic()
-    gen = greedy_decode(cfg, params, prompts, args.gen_len)
+    with use_mesh(mesh):
+        gen = greedy_decode(cfg, params, prompts, args.gen_len)
+        jax.block_until_ready(gen)
     dt = time.monotonic() - t0
     n_tok = args.batch * (args.prompt_len + args.gen_len)
     print(f"served {args.batch} seqs x ({args.prompt_len}+{args.gen_len}) "

@@ -251,9 +251,10 @@ def forward(cfg: ArchConfig, params: dict, inputs: Array,
             segments = segment_runs(stacked, cfg.n_layers)
         carry = (h, jnp.zeros((), jnp.float32))
         for lo, hi in segments:
-            carry, _ = jax.lax.scan(
+            carry, _ = _seg_scan(
                 body, carry,
-                (layer_slice_range(stacked, lo, hi), jnp.arange(lo, hi)))
+                (layer_slice_range(stacked, lo, hi), jnp.arange(lo, hi)),
+                hi - lo)
         h, aux = carry
         h = rms_norm(h, params["final_norm"], cfg.norm_eps)
         return unembed(cfg, params, h), aux
@@ -385,6 +386,29 @@ def _cat_parts(parts):
     return jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts)
 
 
+def _seg_scan(body, carry, xs, length: int):
+    """Drive one layer segment: a real ``lax.scan`` for multi-layer
+    runs, a direct body call for length-1 runs — no scan machinery and
+    no layer-axis ``dynamic_slice`` for trivial depth (this is where
+    the old ~15% segmented-vs-unrolled overhead lived; per-layer
+    segmentation now IS the unrolled path). The direct call also passes
+    a concrete layer index, so trace counts stay one body per segment
+    either way."""
+    if length > 1:
+        return jax.lax.scan(body, carry, xs)
+    xs0 = jax.tree.map(lambda a: a[0], xs)
+    carry, y = body(carry, xs0)
+    return carry, jax.tree.map(lambda a: a[None], y)
+
+
+def _slice_layers(tree, lo: int, hi: int, n_layers: int):
+    """Layer-axis slice of stacked per-layer state; the full range is
+    the identity (the homogeneous one-segment path copies nothing)."""
+    if lo == 0 and hi == n_layers:
+        return tree
+    return jax.tree.map(lambda x: x[lo:hi], tree)
+
+
 def decode_step(cfg: ArchConfig, params: dict, cache: LayerCache,
                 token: Array, positions: Array,
                 segments: Optional[Tuple[Tuple[int, int], ...]] = None
@@ -415,6 +439,7 @@ def decode_step(cfg: ArchConfig, params: dict, cache: LayerCache,
             def body(carry, xs):
                 h, skv = carry                  # skv: stacked (ninv, …) caches
                 lp, mc_l, idx = xs
+                h = hint(h, DP, None, None)
 
                 def with_attn(args):
                     h, skv = args
@@ -436,44 +461,46 @@ def decode_step(cfg: ArchConfig, params: dict, cache: LayerCache,
 
             carry, mc_parts = (h, cache.shared_kv), []
             for lo, hi in segments:
-                carry, mc_new = jax.lax.scan(
+                carry, mc_new = _seg_scan(
                     body, carry,
                     (layer_slice_range(stacked, lo, hi),
-                     jax.tree.map(lambda x: x[lo:hi], cache.mamba),
-                     jnp.arange(lo, hi)))
+                     _slice_layers(cache.mamba, lo, hi, cfg.n_layers),
+                     jnp.arange(lo, hi)), hi - lo)
                 mc_parts.append(mc_new)
             (h, skv) = carry
             new_cache = LayerCache(None, _cat_parts(mc_parts), skv)
         else:
             def body(h, xs):
                 lp, mc_l, idx = xs
+                h = hint(h, DP, None, None)
                 h, mc_new = _layer_decode(cfg, params, lp, idx, h,
                                           mc_l, positions)
                 return h, mc_new
 
             mc_parts = []
             for lo, hi in segments:
-                h, mc_new = jax.lax.scan(
+                h, mc_new = _seg_scan(
                     body, h,
                     (layer_slice_range(stacked, lo, hi),
-                     jax.tree.map(lambda x: x[lo:hi], cache.mamba),
-                     jnp.arange(lo, hi)))
+                     _slice_layers(cache.mamba, lo, hi, cfg.n_layers),
+                     jnp.arange(lo, hi)), hi - lo)
                 mc_parts.append(mc_new)
             new_cache = LayerCache(None, _cat_parts(mc_parts), None)
     else:
         def body(h, xs):
             lp, kv_l, idx = xs
+            h = hint(h, DP, None, None)   # re-pin batch sharding per layer
             h, kv_new = _layer_decode(cfg, params, lp, idx, h,
                                       attn_lib.KVCache(*kv_l), positions)
             return h, kv_new
 
         kv_parts = []
         for lo, hi in segments:
-            h, kv_new = jax.lax.scan(
+            h, kv_new = _seg_scan(
                 body, h,
                 (layer_slice_range(stacked, lo, hi),
-                 jax.tree.map(lambda x: x[lo:hi], cache.kv),
-                 jnp.arange(lo, hi)))
+                 _slice_layers(cache.kv, lo, hi, cfg.n_layers),
+                 jnp.arange(lo, hi)), hi - lo)
             kv_parts.append(kv_new)
         new_cache = LayerCache(_cat_parts(kv_parts), None, None)
 

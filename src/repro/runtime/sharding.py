@@ -15,6 +15,7 @@ sharded; serve keeps 2-D because the 340B config cannot replicate over
   ssm_heads     ("model",)
   batch         ("pod","data") -> ("data",)     [activations/caches]
   kv_seq        ("model",)                      [SP flash-decode split]
+  packed_out    ("model",)                      [packed-linear d_out rows]
   layers        never sharded (scan axis)
 
 A rule applies only if the dim size divides by the product of the mesh
@@ -50,6 +51,10 @@ def logical_rules(multi_pod: bool) -> Dict[str, AxisRule]:
         "ssm_heads": [("model",)],
         "batch": fsdp,
         "kv_seq": [("model",)],
+        # packed-serving formats (core.packed_model): every stored plane
+        # of a PackedLinear except v leads with d_out, so TP = row
+        # sharding on "model"; divisibility fallback = replicate
+        "packed_out": [("model",)],
         "layers": [],
     }
 
