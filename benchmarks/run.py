@@ -14,13 +14,14 @@ import sys
 import time
 
 JOBS = ["table1", "table2", "table3", "fig1", "fig3", "kernels",
-        "packed_serve", "allocator"]
+        "packed_serve", "allocator", "serving_engine"]
 
 
 def run_inline(name: str, fast: bool) -> bool:
     from benchmarks import (bench_allocator, bench_fig1, bench_fig3,
                             bench_kernels, bench_packed_serve,
-                            bench_table1, bench_table2, bench_table3)
+                            bench_serving_engine, bench_table1,
+                            bench_table2, bench_table3)
     jobs = {
         "table1": lambda: bench_table1.check(bench_table1.run(fast)),
         "table2": lambda: bench_table2.check(bench_table2.run(fast)),
@@ -32,6 +33,8 @@ def run_inline(name: str, fast: bool) -> bool:
             bench_packed_serve.run()),
         "allocator": lambda: bench_allocator.check(
             bench_allocator.run(fast)),
+        "serving_engine": lambda: bench_serving_engine.check(
+            bench_serving_engine.run()),
     }
     return bool(jobs[name]())
 

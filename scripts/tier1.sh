@@ -15,6 +15,11 @@
 #                               # stacks, segmented-scan serving, e2e
 #                               # packed forward/decode (full-depth
 #                               # trace-count cases stay @slow)
+#   scripts/tier1.sh engine     # serving-engine loop: paged KV
+#                               # cache + block allocator, request
+#                               # scheduler policy, flash_decode
+#                               # (contiguous + paged), engine e2e
+#                               # traces vs greedy_decode
 #   scripts/tier1.sh allocator  # budget-allocator loop: water-filling
 #                               # solver, @auto plans, plan DSL
 #                               # round-trips, cross-variant kernel
@@ -61,6 +66,12 @@ if [ "${1:-}" = "distributed" ]; then
     exec env XLA_FLAGS="--xla_force_host_platform_device_count=2" \
         python -m pytest -q -m "not slow" \
         tests/test_packed_sharding.py "$@"
+fi
+
+if [ "${1:-}" = "engine" ]; then
+    shift
+    exec python -m pytest -q -m "not slow" \
+        tests/test_serving_engine.py tests/test_flash_decode.py "$@"
 fi
 
 if [ "${1:-}" = "allocator" ]; then

@@ -16,6 +16,16 @@ the 1-byte payload — 2x less than bf16, the §Perf A2 term).
 
 Valid-length masking uses a scalar-prefetch length per batch row
 (cache slots beyond `length` are ignored).
+
+``flash_decode_paged`` is the block-table variant for the paged KV
+cache (`repro.serving.paged_cache`): K/V live in a global block pool
+(n_blocks, bs, KV, dh) and each request owns a row of *logical→physical*
+block indices. The same online-softmax kernel runs, but the K/V
+BlockSpec index maps read the physical block id from a scalar-prefetched
+block table — chunk ``ss`` of request ``bb`` streams pool block
+``block_tables[bb, ss]``. Chunks past the request's valid length are
+skipped (`pl.when`), so decode work is proportional to each request's
+actual cache length, not the table width.
 """
 from __future__ import annotations
 
@@ -82,7 +92,18 @@ def flash_decode(q: Array, k: Array, v: Array, lengths: Array,
     b, kv, g, dh = q.shape
     s = k.shape[1]
     bs = min(bs, s)
-    assert s % bs == 0, (s, bs)
+    if s % bs:
+        # pad the trailing chunk instead of asserting: padded slots sit
+        # at positions >= s >= lengths, so the existing valid-length
+        # mask already excludes them from the softmax
+        pad = (-s) % bs
+        padded = ((0, 0), (0, pad), (0, 0))
+        k = jnp.pad(k, padded + ((0, 0),))
+        v = jnp.pad(v, padded + ((0, 0),))
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, padded)
+            v_scale = jnp.pad(v_scale, padded)
+        s += pad
     quant = k_scale is not None
     if not quant:       # dummy scale operands keep one kernel signature
         k_scale = jnp.ones((b, s, kv), jnp.float32)
@@ -112,3 +133,109 @@ def flash_decode(q: Array, k: Array, v: Array, lengths: Array,
         out_shape=jax.ShapeDtypeStruct((b, kv, g, dh), q.dtype),
         interpret=interpret,
     )(lengths, q, k, v, k_scale, v_scale)
+
+
+# ------------------------------------------------------------------
+# Paged (block-table) variant
+# ------------------------------------------------------------------
+
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                  o_ref, m_ref, l_ref, acc_ref,
+                  *, bs: int, n_s: int, quant: bool):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # chunks wholly past this request's cache length carry no valid
+    # tokens — skip the dot-products (work ∝ actual length, not table
+    # width; a zero-length request touches no chunk at all)
+    @pl.when(s * bs < len_ref[b])
+    def _accumulate():
+        q = q_ref[0, 0].astype(jnp.float32)             # (G, dh)
+        k = k_ref[0, :, 0].astype(jnp.float32)          # (bs, dh)
+        v = v_ref[0, :, 0].astype(jnp.float32)          # (bs, dh)
+        if quant:
+            k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+            v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
+
+        scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+        pos = s * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        valid = pos < len_ref[b]
+        scores = jnp.where(valid, scores, NEG_INF)      # (G, bs)
+
+        m_prev = m_ref[...]                             # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)                     # (G, bs)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(s == n_s - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode_paged(q: Array, k_pool: Array, v_pool: Array,
+                       block_tables: Array, lengths: Array,
+                       k_scale: Array | None = None,
+                       v_scale: Array | None = None,
+                       *, interpret: bool = False) -> Array:
+    """Flash-decode against a paged KV cache.
+
+    q (R, KV, G, dh) pre-scaled by 1/sqrt(dh); k_pool/v_pool
+    (n_blocks, bs, KV, dh) [int8 when scales given, with k_scale/v_scale
+    (n_blocks, bs, KV)]; block_tables (R, n_bt) int32 physical block ids
+    per logical chunk (entries past a request's length may hold
+    anything in range — they are never read); lengths (R,) int32 valid
+    tokens per request. Returns (R, KV, G, dh); zero-length rows
+    return zeros."""
+    r, kv, g, dh = q.shape
+    n_blocks, bs = k_pool.shape[0], k_pool.shape[1]
+    n_bt = block_tables.shape[1]
+    quant = k_scale is not None
+    if not quant:
+        k_scale = jnp.ones((n_blocks, bs, kv), jnp.float32)
+        v_scale = jnp.ones((n_blocks, bs, kv), jnp.float32)
+
+    grid = (r, kv, n_bt)
+    kernel = functools.partial(_paged_kernel, bs=bs, n_s=n_bt, quant=quant)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,        # block_tables, lengths
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh),
+                         lambda bb, kk, ss, bt, lens: (bb, kk, 0, 0)),
+            # chunk ss of request bb streams physical pool block
+            # bt[bb, ss] — the paged indirection lives entirely in the
+            # scalar-prefetched index map
+            pl.BlockSpec((1, bs, 1, dh),
+                         lambda bb, kk, ss, bt, lens: (bt[bb, ss], 0, kk, 0)),
+            pl.BlockSpec((1, bs, 1, dh),
+                         lambda bb, kk, ss, bt, lens: (bt[bb, ss], 0, kk, 0)),
+            pl.BlockSpec((1, bs, 1),
+                         lambda bb, kk, ss, bt, lens: (bt[bb, ss], 0, kk)),
+            pl.BlockSpec((1, bs, 1),
+                         lambda bb, kk, ss, bt, lens: (bt[bb, ss], 0, kk)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh),
+                               lambda bb, kk, ss, bt, lens: (bb, kk, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, dh), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, kv, g, dh), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, q, k_pool, v_pool, k_scale, v_scale)

@@ -202,6 +202,20 @@ def flash_decode_attention(q: Array, k: Array, v: Array, lengths: Array,
                         interpret=interpret)
 
 
+def flash_decode_paged_attention(q: Array, k_pool: Array, v_pool: Array,
+                                 block_tables: Array, lengths: Array,
+                                 k_scale: Optional[Array] = None,
+                                 v_scale: Optional[Array] = None,
+                                 interpret: Optional[bool] = None) -> Array:
+    """Paged (block-table) grouped-query decode attention. q (R, KV, G,
+    dh) pre-scaled; k_pool/v_pool (n_blocks, bs, KV, dh);
+    block_tables (R, n_bt); lengths (R,) — zero-length rows return 0."""
+    from repro.kernels.flash_decode import flash_decode_paged
+    interpret = _on_cpu() if interpret is None else interpret
+    return flash_decode_paged(q, k_pool, v_pool, block_tables, lengths,
+                              k_scale, v_scale, interpret=interpret)
+
+
 def slab_linear_kernel(x: Array, packed: SLaBPacked, **kw) -> Array:
     """Forward one SLaB-compressed linear from its packed bundle via the
     fused kernel (N:M if the sparse part is N:M packed, else dense)."""

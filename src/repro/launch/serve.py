@@ -43,14 +43,28 @@ from repro.models import lm
 from repro.models.common import positions_for
 
 
-def greedy_decode(cfg, params, prompts: jnp.ndarray, gen_len: int):
+def greedy_decode(cfg, params, prompts: jnp.ndarray, gen_len: int,
+                  lengths=None):
     """Prefill + greedy generation in TWO dispatches: one ``lax.scan``
     over the prompt positions (the cache tracks its own write offset,
     so scanning the decode step is semantically identical to the old
     token-by-token Python loop — without its O(prompt_len) dispatch
     overhead) and one scanned generation loop. Runs under the ambient
-    mesh (``meshctx.use_mesh``) when the caller entered one."""
+    mesh (``meshctx.use_mesh``) when the caller entered one.
+
+    ``lengths`` (B,) serves a right-padded ragged batch: row ``r``'s
+    prompt is ``prompts[r, :lengths[r]]`` and its ``gen_len`` outputs
+    start right after it. Implemented as ONE unified scan: at step t a
+    row feeds its next prompt token while t < length, its previously
+    sampled token after — every row's token stream stays contiguous
+    from position 0, so the shared cache offset and positions are exact
+    for all rows and no masking is needed. Short rows keep decoding
+    past their budget (harmless; extra tokens are dropped by the final
+    per-row gather)."""
     b, s = prompts.shape
+    if lengths is not None:
+        return _greedy_decode_ragged(cfg, params, prompts, gen_len,
+                                     jnp.asarray(lengths, jnp.int32))
     s_max = s + gen_len
     cache = lm.init_cache(cfg, b, s_max)
 
@@ -94,6 +108,35 @@ def greedy_decode(cfg, params, prompts: jnp.ndarray, gen_len: int):
     return generate(cache, last_logits)
 
 
+def _greedy_decode_ragged(cfg, params, prompts, gen_len, lengths):
+    b, s = prompts.shape
+    n_steps = s + gen_len - 1               # longest row: s-1 prompt
+    cache = lm.init_cache(cfg, b, s + gen_len)  # steps + gen_len-1 more
+    fed = jnp.concatenate(                  # prompt stream, zero-padded
+        [prompts.astype(jnp.int32),
+         jnp.zeros((b, n_steps - s), jnp.int32)], axis=1)
+
+    @jax.jit
+    def run(cache, fed, lengths):
+        def body(carry, xs):
+            cache, prev = carry
+            ptok, t = xs
+            tok = jnp.where(t < lengths, ptok, prev)
+            pos = positions_for(cfg, b, 1, offset=t)
+            logits, cache = lm.decode_step(cfg, params, cache,
+                                           tok[:, None], pos)
+            nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            return (cache, nxt), nxt
+
+        xs = (jnp.moveaxis(fed, 1, 0), jnp.arange(n_steps))
+        _, ys = jax.lax.scan(body, (cache, jnp.zeros((b,), jnp.int32)), xs)
+        sampled = jnp.moveaxis(ys, 0, 1)    # (B, n_steps)
+        idx = lengths[:, None] - 1 + jnp.arange(gen_len)[None, :]
+        return jnp.take_along_axis(sampled, idx, axis=1)
+
+    return run(cache, fed, lengths)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama2_7b")
@@ -117,6 +160,16 @@ def main():
     ap.add_argument("--packed", action="store_true",
                     help="serve through the fused Pallas kernels (SLaB "
                          "on-HBM format; interpret mode on CPU)")
+    ap.add_argument("--engine", action="store_true",
+                    help="serve an open-loop request trace through the "
+                         "continuous-batching engine (paged KV cache + "
+                         "scheduler, docs/serving_engine.md) instead of "
+                         "one static greedy_decode batch; composes with "
+                         "--packed/--plan/--mesh")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="--engine: requests in the synthetic trace")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="--engine: paged-cache tokens per block")
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
                     help="run prefill+decode under a (data, model) "
                          "device mesh, e.g. --mesh 1,4: weights are "
@@ -244,6 +297,46 @@ def main():
                 params, planner.tree_shardings(axes, params))
 
     from repro.runtime.meshctx import use_mesh
+
+    if args.engine:
+        from repro.serving import Engine, EngineConfig, Request
+        from repro.serving.engine import summarize
+        from repro.serving.paged_cache import blocks_needed
+        rng = np.random.default_rng(args.seed)
+        reqs = []
+        t_arr = 0.0
+        for i in range(args.requests):
+            p_len = int(rng.integers(max(args.prompt_len // 2, 1),
+                                     args.prompt_len + 1))
+            n_new = int(rng.integers(max(args.gen_len // 2, 1),
+                                     args.gen_len + 1))
+            reqs.append(Request(
+                rid=i, prompt=rng.integers(0, cfg.vocab, size=p_len),
+                max_new=n_new, arrival=t_arr))
+            t_arr += float(rng.exponential(0.2))
+        max_len = args.prompt_len + args.gen_len
+        per_req = blocks_needed(max_len, args.block_size)
+        ecfg = EngineConfig(
+            n_slots=args.batch, block_size=args.block_size,
+            n_blocks=per_req * args.batch, max_len=max_len,
+            prefill_chunk=min(8, args.prompt_len))
+        eng = Engine(cfg, params, ecfg, mesh=mesh, planner=planner)
+        t0 = time.monotonic()
+        eng.run(reqs, clock="wall")
+        m = summarize(reqs, time.monotonic() - t0)
+        print(f"engine: {m['n_requests']} requests, "
+              f"{m['n_tokens_out']} tokens in {m['wall_s']:.1f}s "
+              f"({m['tokens_per_s']:.1f} tok/s, "
+              f"{eng.n_steps} steps, {m['n_evictions']} evictions)")
+        print(f"  ttft p50/p95/p99: {m['ttft']['p50']:.3f}/"
+              f"{m['ttft']['p95']:.3f}/{m['ttft']['p99']:.3f}s")
+        lat = m['per_token_latency']
+        print(f"  per-token p50/p95/p99: {lat['p50'] * 1e3:.1f}/"
+              f"{lat['p95'] * 1e3:.1f}/{lat['p99'] * 1e3:.1f}ms")
+        print("sample generation:",
+              np.asarray(reqs[0].out, np.int32)[:16])
+        return
+
     corpus = SyntheticCorpus(cfg.vocab, seed=args.seed)
     prompts = jnp.asarray(
         corpus.batch(0, args.batch, args.prompt_len)["inputs"])

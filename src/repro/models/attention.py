@@ -219,3 +219,58 @@ def decode_attention(
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs, vv)
     out = out.reshape(b, s, cfg.d_q)
     return linear(out, p["wo"], tap="wo"), new_cache
+
+
+def paged_decode_attention(cfg: ArchConfig, p: dict, x: Array, pool,
+                           block_tables: Array, lengths: Array,
+                           positions: Array, active: Array):
+    """One-token decode against a paged KV cache (one layer's pool).
+
+    x (R, 1, D); pool a single-layer ``serving.paged_cache.PagedKVCache``
+    slice (k/v (n_blocks, bs, KV, dh)); block_tables (R, n_bt) int32;
+    lengths (R,) tokens already cached per row (also the write
+    position); active (R,) bool — inactive rows write nothing and
+    return zeros. Returns (out (R, 1, D), updated pool).
+
+    The new token's K/V scatter into block ``block_tables[r, len//bs]``
+    at offset ``len % bs``; attention then reads the whole stream
+    through the block table via the ``flash_decode_paged`` kernel
+    (scalar-prefetched indices), int8 path included."""
+    from repro.kernels import ops
+    from repro.serving.paged_cache import paged_write
+    b, s, d = x.shape
+    kv, g, dh = cfg.n_kv, cfg.n_heads // cfg.n_kv, cfg.d_head
+    q = linear(x, p["wq"], tap="wq").reshape(b, s, cfg.n_heads, dh)
+    k_new = linear(x, p["wk"], tap="wk").reshape(b, s, kv, dh)
+    v_new = linear(x, p["wv"], tap="wv").reshape(b, s, kv, dh)
+    q = rotate(cfg, q, positions)
+    k_new = rotate(cfg, k_new, positions)
+
+    bs_blk = pool.block_size
+    n_bt = block_tables.shape[1]
+    # physical write slot; clamp shields idle rows with stale lengths
+    # (their write is dropped by `active` anyway)
+    blk = jnp.take_along_axis(
+        block_tables, jnp.clip(lengths // bs_blk, 0, n_bt - 1)[:, None],
+        axis=1)[:, 0]
+    off = lengths % bs_blk
+    if cfg.kv_quant:
+        k_q, k_s = _quantize_token(k_new)
+        v_q, v_s = _quantize_token(v_new)
+        pool = pool._replace(
+            k=paged_write(pool.k, k_q[:, 0], blk, off, active),
+            v=paged_write(pool.v, v_q[:, 0], blk, off, active),
+            k_scale=paged_write(pool.k_scale, k_s[:, 0], blk, off, active),
+            v_scale=paged_write(pool.v_scale, v_s[:, 0], blk, off, active))
+    else:
+        pool = pool._replace(
+            k=paged_write(pool.k, k_new[:, 0], blk, off, active),
+            v=paged_write(pool.v, v_new[:, 0], blk, off, active))
+
+    qg = q[:, 0].reshape(b, kv, g, dh) * (dh ** -0.5)
+    att_len = jnp.where(active, lengths + 1, 0).astype(jnp.int32)
+    out = ops.flash_decode_paged_attention(
+        qg, pool.k, pool.v, block_tables, att_len,
+        pool.k_scale, pool.v_scale)
+    out = out.reshape(b, 1, cfg.d_q).astype(x.dtype)
+    return linear(out, p["wo"], tap="wo"), pool

@@ -508,6 +508,76 @@ def decode_step(cfg: ArchConfig, params: dict, cache: LayerCache,
     return unembed(cfg, params, h), new_cache
 
 
+def _layer_decode_paged(cfg: ArchConfig, params: dict, lp: dict, idx: Array,
+                        h: Array, pool_l, block_tables: Array,
+                        lengths: Array, positions: Array, active: Array):
+    with tap_scope("attn"):
+        a, pool_l = attn_lib.paged_decode_attention(
+            cfg, lp["attn"], rms_norm(h, lp["attn_norm"], cfg.norm_eps),
+            pool_l, block_tables, lengths, positions, active)
+    h = h + a
+    hin = rms_norm(h, lp["mlp_norm"], cfg.norm_eps)
+    if cfg.family == "moe":
+        with tap_scope("moe"):
+            y, _ = moe_lib.moe_ffn(cfg, lp["moe"], hin)
+    else:
+        with tap_scope("mlp"):
+            y = mlp_lib.mlp(cfg, lp["mlp"], hin)
+    return h + y, pool_l
+
+
+def paged_decode_step(cfg: ArchConfig, params: dict, paged,
+                      block_tables: Array, lengths: Array, token: Array,
+                      active: Array,
+                      segments: Optional[Tuple[Tuple[int, int], ...]] = None
+                      ):
+    """One decode step against the paged KV cache (serving engine path).
+
+    token (R, 1) int32 over the engine's fixed request slots; paged a
+    ``serving.paged_cache.PagedKVCache``; block_tables (R, n_bt) int32;
+    lengths (R,) tokens already cached per row; active (R,) bool.
+    Returns (logits (R, 1, V), new paged cache). Inactive rows write
+    nothing into the pool and their logits are garbage-but-finite.
+
+    The layer loop reuses the segmented-scan machinery of
+    ``decode_step`` — heterogeneous packed stacks trace O(#segments)
+    bodies — with the per-layer pool slices riding the scan xs exactly
+    like the dense KV cache does. KV-attention families only (the
+    engine gates SSM/hybrid out at construction)."""
+    from repro.runtime.meshctx import DP, hint
+    if cfg.family in ("ssm", "hybrid", "audio"):
+        raise ValueError(f"paged decode: unsupported family {cfg.family!r}")
+    r = token.shape[0]
+    positions = positions_for(cfg, r, 1, offset=lengths[:, None])
+    h = embed_inputs(cfg, params, token)
+    h = hint(h, DP, None, None)
+
+    stacked = params["layers"]
+    if segments is None:
+        segments = segment_runs(stacked, cfg.n_layers)
+
+    def body(h, xs):
+        lp, pool_l, idx = xs
+        h = hint(h, DP, None, None)
+        h, pool_new = _layer_decode_paged(cfg, params, lp, idx, h, pool_l,
+                                          block_tables, lengths, positions,
+                                          active)
+        return h, pool_new
+
+    pool_parts = []
+    for lo, hi in segments:
+        h, pool_new = _seg_scan(
+            body, h,
+            (layer_slice_range(stacked, lo, hi),
+             _slice_layers(paged, lo, hi, cfg.n_layers),
+             jnp.arange(lo, hi)), hi - lo)
+        pool_parts.append(pool_new)
+    new_paged = _cat_parts(pool_parts)
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return unembed(cfg, params, h), new_paged
+
+
 def prefill(cfg: ArchConfig, params: dict, inputs: Array,
             positions: Optional[Array] = None) -> Tuple[Array, Array]:
     """Prefill = full forward returning logits (cache fill is modeled as

@@ -56,6 +56,11 @@ def logical_rules(multi_pod: bool) -> Dict[str, AxisRule]:
         # sharding on "model"; divisibility fallback = replicate
         "packed_out": [("model",)],
         "layers": [],
+        # paged KV pools (serving.paged_cache): blocks are a global
+        # free pool — any request may own any block, so the block dim
+        # is never sharded; TP splits the kv-head dim as usual
+        "kv_blocks": [],
+        "kv_heads": [("model",)],
     }
 
 

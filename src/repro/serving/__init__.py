@@ -1,0 +1,25 @@
+"""Continuous-batching serving engine.
+
+The pieces, bottom-up:
+
+  * ``paged_cache`` — the paged/block KV cache: per-layer K/V block
+    pools with a per-request block table and a host-side free-list
+    allocator (``BlockAllocator``).
+  * ``scheduler`` — host-side request scheduler: admits variable-length
+    requests mid-flight, interleaves chunked prefill with decode,
+    retires finished streams, and evicts-with-requeue on block OOM.
+  * ``engine`` — the decode loop: jitted fixed-shape prefill/decode
+    steps (``lm.paged_decode_step`` through the segmented layer scan
+    and the ``flash_decode_paged`` kernel) driven over the scheduler's
+    dynamic request state, replaying open-loop arrival traces.
+
+Entry point: ``Engine.run(requests)`` or ``python -m repro.launch.serve
+--engine`` (see docs/serving_engine.md).
+"""
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.paged_cache import (BlockAllocator, PagedKVCache,
+                                       init_paged_cache, paged_cache_axes)
+from repro.serving.scheduler import Request, Scheduler
+
+__all__ = ["Engine", "EngineConfig", "BlockAllocator", "PagedKVCache",
+           "init_paged_cache", "paged_cache_axes", "Request", "Scheduler"]

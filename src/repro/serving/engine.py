@@ -1,0 +1,214 @@
+"""Continuous-batching decode engine: jitted fixed-shape steps over
+dynamic request state.
+
+The engine owns R fixed request slots (the batch rows of every jitted
+step), a paged KV cache sized in blocks, and a ``Scheduler``. Each
+iteration of ``run``:
+
+  1. admit arrived requests into free slots (mid-flight — running
+     streams are untouched);
+  2. ask the scheduler for this step's batch: prefill rows consume up
+     to ``prefill_chunk`` prompt tokens, decode rows ride along with
+     one token each (Orca-style fused iteration). Pure-decode steps
+     use the C=1 compilation of the same function;
+  3. run ONE jitted step: a ``lax.scan`` over the chunk's token
+     positions, each position a ``lm.paged_decode_step`` (the segmented
+     layer scan + ``flash_decode_paged`` block-table kernel), with
+     per-row validity masks — shapes never depend on which requests are
+     live, so there are exactly two compilations (C and 1) for the
+     whole serving lifetime;
+  4. sample greedily at each row's last valid position, hand tokens
+     back to the scheduler (TTFT / latency bookkeeping, retirement),
+     and loop.
+
+Open-loop traces: requests carry ``arrival`` stamps; ``clock="steps"``
+replays them against the engine-step counter (deterministic — tests),
+``clock="wall"`` against wall time (benchmarks). The engine never
+blocks on stragglers: batch composition changes every step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.common import ArchConfig
+from repro.serving.paged_cache import (PagedKVCache, init_paged_cache,
+                                       paged_cache_axes, table_width)
+from repro.serving.scheduler import Request, Scheduler
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_slots: int = 4              # R: concurrent streams (batch rows)
+    n_blocks: int = 64            # KV pool size, in blocks
+    block_size: int = 16          # tokens per block
+    max_len: int = 256            # per-stream cap (prompt + gen - 1)
+    prefill_chunk: int = 8        # prompt tokens per prefill step
+
+
+class Engine:
+    """Continuous-batching greedy-decode engine over a paged KV cache.
+
+    ``params`` may be dense, SLaB-compressed dense-equivalent, or
+    packed (``PackedStack`` leaves — the fused-kernel serving path);
+    the paged decode step drives the same segmented layer scan either
+    way. Pass ``mesh``/``planner`` (as built by ``serve.py --mesh``) to
+    run the steps under a device mesh with planner-placed pools."""
+
+    def __init__(self, cfg: ArchConfig, params: dict,
+                 ecfg: EngineConfig = EngineConfig(),
+                 mesh=None, planner=None):
+        if cfg.family in ("ssm", "hybrid", "audio"):
+            raise ValueError(
+                f"engine serves KV-attention families; {cfg.family!r} "
+                "has no paged cache")
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.mesh = mesh
+        self.sched = Scheduler(ecfg.n_slots, ecfg.n_blocks,
+                               ecfg.block_size, ecfg.max_len,
+                               ecfg.prefill_chunk)
+        self.paged = init_paged_cache(cfg, ecfg.n_blocks, ecfg.block_size)
+        if planner is not None:
+            from repro.models.common import is_axes_leaf
+            self.paged = jax.device_put(
+                self.paged, jax.tree.map(
+                    lambda ax, leaf: planner.sharding(ax, leaf.shape),
+                    paged_cache_axes(cfg), self.paged,
+                    is_leaf=is_axes_leaf))
+        self._steps: Dict[int, object] = {}     # chunk C -> jitted step
+        self.n_steps = 0
+
+    # -- jitted step -------------------------------------------------------
+
+    def _step_fn(self, c: int):
+        """Compile (once per chunk size) the fused prefill/decode step:
+        scan ``c`` token positions; row r is live at position t iff
+        t < n_valid[r]. Returns the greedy token at each row's LAST
+        valid position (prefill completion / decode output) plus the
+        updated pool."""
+        cfg, params = self.cfg, self.params
+
+        def step(paged: PagedKVCache, tables: Array, lengths: Array,
+                 tokens: Array, n_valid: Array):
+            last0 = jnp.zeros((tokens.shape[0],), jnp.int32)
+
+            def body(carry, xs):
+                paged, lens, last = carry
+                tok, t = xs
+                active = t < n_valid
+                logits, paged = lm.paged_decode_step(
+                    cfg, params, paged, tables, lens, tok[:, None], active)
+                nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+                last = jnp.where(t == n_valid - 1, nxt, last)
+                return (paged, lens + active, last), None
+
+            xs = (jnp.moveaxis(tokens, 1, 0), jnp.arange(c))
+            (paged, _, last), _ = jax.lax.scan(
+                body, (paged, lengths, last0), xs)
+            return paged, last
+
+        return jax.jit(step)
+
+    def _run_step(self, tokens: np.ndarray, n_valid: np.ndarray
+                  ) -> np.ndarray:
+        c = tokens.shape[1]
+        if c not in self._steps:
+            self._steps[c] = self._step_fn(c)
+        args = (self.paged,
+                jnp.asarray(self.sched.block_table),
+                jnp.asarray(self.sched.lengths),
+                jnp.asarray(tokens), jnp.asarray(n_valid))
+        if self.mesh is not None:
+            from repro.runtime.meshctx import use_mesh
+            with use_mesh(self.mesh):
+                self.paged, last = self._steps[c](*args)
+        else:
+            self.paged, last = self._steps[c](*args)
+        return np.asarray(last)
+
+    # -- serving loop ------------------------------------------------------
+
+    def run(self, requests: Sequence[Request], clock: str = "steps",
+            max_steps: Optional[int] = None) -> List[Request]:
+        """Serve an open-loop trace to completion. Returns the requests
+        (same objects) with ``out``/``ttft``/``token_times``/``finish``
+        populated; arrival order need not be sorted."""
+        if clock not in ("steps", "wall"):
+            raise ValueError(clock)
+        for req in requests:
+            self.sched.submit(req)
+        t0 = time.monotonic()
+        idle_guard = 0
+        while self.sched.has_work():
+            now = (float(self.n_steps) if clock == "steps"
+                   else time.monotonic() - t0)
+            self.sched.admit(now)
+            plan = self.sched.plan_step()
+            if plan is None:
+                # nothing runnable: wait for the next arrival
+                nxt = self.sched.next_arrival()
+                if nxt is None and not self.sched.waiting:
+                    raise RuntimeError("scheduler stuck with no work")
+                if clock == "steps":
+                    self.n_steps += 1
+                else:
+                    time.sleep(min(1e-3, max(nxt - now, 0.0) if nxt
+                                   else 1e-3))
+                idle_guard += 1
+                if idle_guard > 100_000:
+                    raise RuntimeError("engine idle-looped 100k steps")
+                continue
+            idle_guard = 0
+            tokens, n_valid, _ = plan
+            last = self._run_step(tokens, n_valid)
+            self.n_steps += 1
+            emit_t = (float(self.n_steps) if clock == "steps"
+                      else time.monotonic() - t0)
+            self.sched.commit_step(n_valid, last, emit_t)
+            if max_steps is not None and self.n_steps >= max_steps:
+                raise RuntimeError(
+                    f"engine exceeded max_steps={max_steps} with "
+                    f"{len(self.sched.slots)} running / "
+                    f"{len(self.sched.waiting)} waiting")
+        return list(requests)
+
+
+# ----------------------------------------------------------------------
+# Metrics
+# ----------------------------------------------------------------------
+
+def summarize(requests: Sequence[Request], wall_s: float) -> dict:
+    """Aggregate serving metrics over a completed trace: TTFT and
+    inter-token latency percentiles (units = the run's clock), plus
+    aggregate generated tokens/s."""
+    ttfts = [r.ttft for r in requests if r.ttft is not None]
+    inter: List[float] = []
+    for r in requests:
+        ts = r.token_times
+        inter.extend(b - a for a, b in zip(ts, ts[1:]))
+    n_tok = sum(r.n_generated for r in requests)
+
+    def pct(xs, q):
+        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+    return {
+        "n_requests": len(requests),
+        "n_tokens_out": n_tok,
+        "wall_s": wall_s,
+        "tokens_per_s": n_tok / wall_s if wall_s > 0 else 0.0,
+        "ttft": {"p50": pct(ttfts, 50), "p95": pct(ttfts, 95),
+                 "p99": pct(ttfts, 99)},
+        "per_token_latency": {"p50": pct(inter, 50), "p95": pct(inter, 95),
+                              "p99": pct(inter, 99)},
+        "n_evictions": sum(r.n_evictions for r in requests),
+    }

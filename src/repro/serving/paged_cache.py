@@ -1,0 +1,141 @@
+"""Paged KV cache: fixed-size blocks, per-request block tables, and a
+host-side free-list allocator.
+
+Layout. One global pool per layer holds every request's K/V in
+fixed-size blocks:
+
+    k, v     (L, n_blocks, block_size, KV, dh)      cfg.dtype | int8
+    k_scale  (L, n_blocks, block_size, KV) f32      int8 mode only
+
+A request's cache is the *logical* concatenation of the blocks its
+block-table row names: ``block_tables[r, j]`` is the physical block
+holding tokens ``[j*block_size, (j+1)*block_size)`` of request ``r``.
+Blocks are allocated on demand as a stream grows and returned to the
+free list when it retires (or is evicted) — fragmentation-free KV
+memory at block granularity, the vLLM paging idea.
+
+Device state is only the pools. Block tables and lengths are small
+host-side numpy arrays owned by the scheduler and shipped as ordinary
+jit arguments each step, so allocation/eviction never touches device
+state and the step functions stay pure.
+
+Writes go through ``paged_write``: a flat scatter at
+``block_id * block_size + offset`` with ``mode="drop"`` so inactive
+rows (idle slots, exhausted prefill rows) write nowhere. Reads go
+through the ``flash_decode_paged`` kernel, whose BlockSpec index maps
+consume the block table as a scalar-prefetch operand.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+
+Array = jax.Array
+
+
+class PagedKVCache(NamedTuple):
+    """Stacked per-layer block pools (exactly one pool per attention
+    layer; families without KV attention don't page)."""
+    k: Array                        # (L, n_blocks, bs, KV, dh)
+    v: Array                        # (L, n_blocks, bs, KV, dh)
+    k_scale: Optional[Array] = None   # (L, n_blocks, bs, KV) f32, int8 only
+    v_scale: Optional[Array] = None
+
+    # indexed from the END so the properties are correct both for the
+    # stacked (L, n_blocks, bs, KV, dh) layout and for a single-layer
+    # (n_blocks, bs, KV, dh) slice riding a layer scan
+    @property
+    def n_blocks(self) -> int:
+        return self.k.shape[-4]
+
+    @property
+    def block_size(self) -> int:
+        return self.k.shape[-3]
+
+
+def init_paged_cache(cfg: ArchConfig, n_blocks: int,
+                     block_size: int) -> PagedKVCache:
+    if cfg.family in ("ssm", "hybrid", "audio"):
+        raise ValueError(
+            f"paged KV serving needs a KV-attention family, not "
+            f"{cfg.family!r} (SSM state is O(1) — it doesn't page)")
+    shp = (cfg.n_layers, n_blocks, block_size, cfg.n_kv, cfg.d_head)
+    if cfg.kv_quant:
+        sshp = shp[:-1]
+        return PagedKVCache(jnp.zeros(shp, jnp.int8),
+                            jnp.zeros(shp, jnp.int8),
+                            jnp.zeros(sshp, jnp.float32),
+                            jnp.zeros(sshp, jnp.float32))
+    return PagedKVCache(jnp.zeros(shp, cfg.dtype), jnp.zeros(shp, cfg.dtype))
+
+
+def paged_cache_axes(cfg: ArchConfig) -> PagedKVCache:
+    """Logical axes for planner placement (runtime.sharding rules):
+    blocks are never sharded — any request may own any block, so a
+    block dim split would scatter one stream across shards — while the
+    KV-head dim TP-shards over "model" when it divides (each shard
+    serves its heads' pool; the flash-decode grid is per-kv-head)."""
+    scale_ax = (("layers", "kv_blocks", None, "kv_heads")
+                if cfg.kv_quant else None)
+    ax = ("layers", "kv_blocks", None, "kv_heads", None)
+    return PagedKVCache(ax, ax, scale_ax, scale_ax)
+
+
+def paged_write(pool: Array, new: Array, block_ids: Array, offsets: Array,
+                active: Array) -> Array:
+    """Scatter one token per request row into a (single-layer) pool.
+
+    pool (n_blocks, bs, KV, dh) | (n_blocks, bs, KV); new (R, KV, dh) |
+    (R, KV); block_ids/offsets (R,) int32; active (R,) bool. Inactive
+    rows are routed out of bounds and dropped by the scatter."""
+    n_blocks, bs = pool.shape[0], pool.shape[1]
+    flat = pool.reshape((n_blocks * bs,) + pool.shape[2:])
+    idx = jnp.where(active, block_ids * bs + offsets, n_blocks * bs)
+    flat = flat.at[idx].set(new.astype(pool.dtype), mode="drop")
+    return flat.reshape(pool.shape)
+
+
+class BlockAllocator:
+    """Host-side free list over the pool's physical block ids.
+
+    LIFO reuse keeps recently-freed blocks hot. The allocator is
+    all-or-nothing: ``alloc(n)`` either returns n block ids or None
+    (caller decides to evict/queue) — no partial grants to unwind."""
+
+    def __init__(self, n_blocks: int):
+        self.n_blocks = n_blocks
+        self._free: List[int] = list(range(n_blocks - 1, -1, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        got = self._free[-n:][::-1] if n else []
+        del self._free[len(self._free) - n:]
+        return got
+
+    def free(self, ids: List[int]) -> None:
+        for b in ids:
+            if not (0 <= b < self.n_blocks):
+                raise ValueError(f"free of out-of-range block {b}")
+        if set(ids) & set(self._free):
+            raise ValueError(f"double free: {set(ids) & set(self._free)}")
+        self._free.extend(ids)
+
+
+def blocks_needed(n_tokens: int, block_size: int) -> int:
+    return -(-n_tokens // block_size)
+
+
+def table_width(max_len: int, block_size: int) -> int:
+    """Block-table columns needed to address ``max_len`` tokens."""
+    return max(blocks_needed(max_len, block_size), 1)

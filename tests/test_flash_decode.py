@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.flash_decode import flash_decode
+from repro.kernels.flash_decode import flash_decode, flash_decode_paged
 
 CASES = [  # (B, KV, G, dh, S, bs)
     (2, 4, 3, 32, 256, 64),
@@ -58,6 +58,118 @@ def test_flash_decode_int8(case):
     # and the quantized result tracks the exact one within int8 budget
     exact = ref.flash_decode_ref(q, k, v, lengths)
     assert float(jnp.max(jnp.abs(got - exact))) < 0.05
+
+
+def _quant(t):
+    sc = jnp.maximum(jnp.max(jnp.abs(t), -1) / 127.0, 1e-8)
+    qv = jnp.clip(jnp.round(t / sc[..., None]), -127, 127)
+    return qv.astype(jnp.int8), sc
+
+
+@pytest.mark.parametrize("case", [
+    (2, 2, 2, 32, 100, 32),      # s % bs != 0: final chunk padded
+    (1, 4, 2, 16, 7, 32),        # bs > s: single clamped chunk
+    (2, 1, 1, 16, 33, 32),       # one token past the chunk boundary
+], ids=str)
+def test_flash_decode_nondivisible(case):
+    """s need not be a multiple of bs: the kernel pads the tail chunk
+    and masks it with the valid-length predicate."""
+    q, k, v, lengths = _mk(case)
+    want = ref.flash_decode_ref(q, k, v, lengths)
+    got = flash_decode(q, k, v, lengths, bs=case[-1], interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_decode_nondivisible_int8():
+    case = (2, 2, 2, 32, 100, 32)
+    q, k, v, lengths = _mk(case)
+    kq, ks_ = _quant(k)
+    vq, vs_ = _quant(v)
+    want = ref.flash_decode_ref(q, kq, vq, lengths, ks_, vs_)
+    got = flash_decode(q, kq, vq, lengths, ks_, vs_, bs=case[-1],
+                       interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_decode_ragged_int8_parity():
+    """int8 path at ragged per-row lengths (incl. length == 1)."""
+    b, kv, g, dh, s, bs = 4, 2, 3, 32, 96, 32
+    q, k, v, _ = _mk((b, kv, g, dh, s, bs), seed=3)
+    lengths = jnp.array([1, 17, 96, 40], jnp.int32)
+    kq, ks_ = _quant(k)
+    vq, vs_ = _quant(v)
+    want = ref.flash_decode_ref(q, kq, vq, lengths, ks_, vs_)
+    got = flash_decode(q, kq, vq, lengths, ks_, vs_, bs=bs,
+                       interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# Paged variant: reads K/V through per-request block tables
+# ----------------------------------------------------------------------
+
+def _scatter_to_pool(k, v, bs_blk, n_blocks, seed=0):
+    """Lay contiguous (B, S, KV, dh) K/V into a shuffled block pool;
+    returns pools, block tables, and the inverse layout check data."""
+    b, s, kv, dh = k.shape
+    n_bt = -(-s // bs_blk)
+    assert n_blocks >= b * n_bt
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n_blocks)[:b * n_bt].reshape(b, n_bt)
+    kp = np.zeros((n_blocks, bs_blk, kv, dh), np.asarray(k).dtype)
+    vp = np.zeros_like(kp)
+    pad = n_bt * bs_blk - s
+    kc = np.pad(np.asarray(k), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vc = np.pad(np.asarray(v), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    for r in range(b):
+        for j in range(n_bt):
+            kp[perm[r, j]] = kc[r, j * bs_blk:(j + 1) * bs_blk]
+            vp[perm[r, j]] = vc[r, j * bs_blk:(j + 1) * bs_blk]
+    return (jnp.asarray(kp), jnp.asarray(vp),
+            jnp.asarray(perm, jnp.int32))
+
+
+def test_flash_decode_paged_matches_ref():
+    b, kv, g, dh, s = 3, 2, 2, 32, 60
+    q, k, v, _ = _mk((b, kv, g, dh, s, 16), seed=5)
+    lengths = jnp.array([60, 13, 1], jnp.int32)
+    kp, vp, bt = _scatter_to_pool(k, v, bs_blk=16, n_blocks=16)
+    want = ref.flash_decode_ref(q, k, v, lengths)
+    got = flash_decode_paged(q, kp, vp, bt, lengths, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_decode_paged_int8():
+    b, kv, g, dh, s = 2, 2, 2, 32, 48
+    q, k, v, _ = _mk((b, kv, g, dh, s, 16), seed=7)
+    lengths = jnp.array([48, 29], jnp.int32)
+    kq, ks_ = _quant(k)
+    vq, vs_ = _quant(v)
+    want = ref.flash_decode_ref(q, kq, vq, lengths, ks_, vs_)
+    kp, vp, bt = _scatter_to_pool(kq, vq, bs_blk=16, n_blocks=8)
+    ksp, vsp, _ = _scatter_to_pool(ks_[..., None], vs_[..., None],
+                                   bs_blk=16, n_blocks=8)
+    got = flash_decode_paged(q, kp, vp, bt, lengths,
+                             ksp[..., 0], vsp[..., 0], interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_decode_paged_zero_length_rows():
+    """Inactive slots (length 0) must come back as exact zeros."""
+    b, kv, g, dh, s = 2, 2, 2, 16, 32
+    q, k, v, _ = _mk((b, kv, g, dh, s, 16), seed=9)
+    lengths = jnp.array([32, 0], jnp.int32)
+    kp, vp, bt = _scatter_to_pool(k, v, bs_blk=16, n_blocks=8)
+    got = np.asarray(flash_decode_paged(q, kp, vp, bt, lengths,
+                                        interpret=True))
+    want = np.asarray(ref.flash_decode_ref(q, k, v, lengths))
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-5, atol=1e-5)
+    assert np.array_equal(got[1], np.zeros_like(got[1]))
 
 
 def test_flash_decode_respects_length():
