@@ -57,6 +57,10 @@ PLAN = ("attn.wo=wanda; attn.*=sparsegpt@pattern=2:4; "
 BATCH, STEPS = 4, 8
 DEPTH = 24                    # layer count for the trace-cost story
 
+MOE_ARCH = "phi3_5_moe"       # the expert-packed row
+MOE_PLAN = "*=slab"
+MOE_EXPERT_KEYS = ("w_gate", "w_up", "w_down")
+
 
 def _decode_stepper(cfg, params, segments=None, batch=BATCH, steps=STEPS):
     """Compiled decode closure + a timed-pass runner returning tok/s."""
@@ -160,6 +164,39 @@ def _mesh_toks_per_s():
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
+def _moe_row():
+    """Expert-packed MoE vs dense: decode tok/s plus the bytes of the
+    three 3-D expert leaves served by the grouped-expert kernels (the
+    dense islands the expert-axis PackedStack finally packed)."""
+    cfg = configs.get(MOE_ARCH, smoke=True).with_(dtype=jnp.float32)
+    params, _ = lm.init(cfg, jax.random.PRNGKey(1))
+    cal = calibration_batch(cfg.vocab, n_seq=4, seq_len=32)
+    plan = CompressionPlan.parse(MOE_PLAN,
+                                 base=SLaBConfig(cr=0.5, iters=4))
+    dense_c, _, decs = compress_model(cfg, params, cal, plan=plan,
+                                      keep_decompositions=True)
+    packed, rep = pack_plan_decs(dense_c, decs, cfg.n_layers, plan)
+    rates = _decode_toks_per_s({
+        "dense": _decode_stepper(cfg, dense_c),
+        "expert_packed": _decode_stepper(cfg, packed),
+    })
+    pb = sum(sum(a.nbytes
+                 for a in jax.tree.leaves(packed["layers"]["moe"][k]))
+             for k in MOE_EXPERT_KEYS)
+    db = sum(dense_c["layers"]["moe"][k].nbytes for k in MOE_EXPERT_KEYS)
+    return {
+        "arch": cfg.name,
+        "plan": MOE_PLAN,
+        "n_packed": rep.n_packed,
+        "dense_fallback": len(rep.fallback),
+        "by_variant": rep.by_variant,
+        "tokens_per_s": rates,
+        "expert_bytes_packed": pb,
+        "expert_bytes_dense": db,
+        "expert_bytes_ratio": pb / db,
+    }
+
+
 def _lower_seconds(cfg, params, segments=None) -> float:
     cache = lm.init_cache(cfg, BATCH, 2)
     tok = jnp.zeros((BATCH, 1), jnp.int32)
@@ -205,6 +242,7 @@ def run():
                                segments=per_layer_segments(DEPTH))
 
     mesh_rates = _mesh_toks_per_s()
+    moe = _moe_row()
 
     rows = {
         "arch": cfg.name,
@@ -222,6 +260,7 @@ def run():
                           "segmented": lower_seg,
                           "unrolled": lower_unr},
         "variants": variants,
+        "moe": moe,
     }
     emit("BENCH_packed_serve", rows)
     return rows
@@ -246,14 +285,23 @@ def check(rows) -> bool:
     for m in MESH_SIZES:
         ok = ok and mesh.get(f"model={m}", 0.0) > 0.0
     ok = ok and mesh["model=1"] >= 0.6 * mesh["nomesh"]
+    moe = rows["moe"]
+    ok = ok and moe["dense_fallback"] == 0
+    ok = ok and moe["expert_bytes_ratio"] < 1.0
     return ok
 
 
 if __name__ == "__main__":
     rows = run()
-    print({k: v for k, v in rows.items() if k != "variants"})
+    print({k: v for k, v in rows.items() if k not in ("variants", "moe")})
     for var, agg in sorted(rows["variants"].items()):
         print(f"  {var}: {agg['bytes_per_linear_packed']/1e3:.1f} kB/linear "
               f"vs dense {agg['bytes_per_linear_dense']/1e3:.1f} kB "
               f"({agg['bytes_ratio']:.2f}x)")
+    moe = rows["moe"]
+    print(f"  moe[{moe['arch']}]: expert bytes "
+          f"{moe['expert_bytes_packed']/1e3:.1f} kB vs dense "
+          f"{moe['expert_bytes_dense']/1e3:.1f} kB "
+          f"({moe['expert_bytes_ratio']:.2f}x), "
+          f"fallback={moe['dense_fallback']}")
     print("packed_serve check:", "PASS" if check(rows) else "FAIL")

@@ -15,6 +15,11 @@
 #                               # stacks, segmented-scan serving, e2e
 #                               # packed forward/decode (full-depth
 #                               # trace-count cases stay @slow)
+#   scripts/tier1.sh moe        # expert-packed MoE loop: K_max
+#                               # bucketing, grouped-expert kernels,
+#                               # dense-member fallbacks, MoE/hybrid
+#                               # shared-block parity (engine replay +
+#                               # deepseek geometry stay @slow)
 #   scripts/tier1.sh engine     # serving-engine loop: paged KV
 #                               # cache + block allocator, request
 #                               # scheduler policy, flash_decode
@@ -59,6 +64,12 @@ if [ "${1:-}" = "packed" ]; then
         tests/test_kernels.py tests/test_packed_serving.py \
         tests/test_hetero_packing.py tests/test_variant_parity.py \
         tests/test_ell_kernels.py tests/test_segmented_scan.py "$@"
+fi
+
+if [ "${1:-}" = "moe" ]; then
+    shift
+    exec python -m pytest -q -m "not slow" \
+        tests/test_expert_packing.py tests/test_models.py "$@"
 fi
 
 if [ "${1:-}" = "distributed" ]; then

@@ -25,11 +25,11 @@ and a static ``variant`` tag picks the kernel at dispatch time:
                                                linear as served-in-format)
 
 Unstructured sparse parts are routed to the row-padded ELL format
-(uint16 column ids, K_max = realized max per-row nnz) whenever it wins
-on bytes — ``packing.ell_wins_bytes`` — so unstructured SLaB /
-HASSLE-free / Wanda layers finally store fewer HBM bytes than dense;
-the ``*-dense`` variants remain the fallback for near-dense sparsity or
-D_in beyond uint16.
+(uint16 column ids, uint32 beyond 65535 columns; K_max = realized max
+per-row nnz) whenever it wins on bytes — ``packing.ell_wins_bytes`` —
+so unstructured SLaB / HASSLE-free / Wanda layers finally store fewer
+HBM bytes than dense; the ``*-dense`` variants remain the fallback for
+near-dense sparsity.
 
 Static metadata (variant, m_pat, d_in, d_out, rank) rides in the pytree
 aux data, so stacks of packed layers slice cleanly through ``lax.scan``
@@ -217,8 +217,54 @@ class PackedStack:
         return out
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ExpertPackedStack:
+    """Signature-grouped packed stacks for one 3-D MoE leaf across the
+    EXPERT dim — the expert-axis analogue of ``PackedStack``'s layer
+    grouping.
+
+    ``groups[g]`` is a PackedLinear whose every plane carries a leading
+    expert dim over ``members[g]`` (expert ids, ascending). Experts
+    group by full packed signature; for ELL variants the per-expert
+    realized K_max is first quantized into buckets
+    (``pack_expert_stack``) and each bucket pads to ITS realized max —
+    ragged experts never pad to the global max. ``dense`` holds the
+    original model-orientation ``(E_d, D_in, D_out)`` slices for
+    experts with no packable terms. One grouped-kernel launch serves a
+    whole bucket (``expert_matmul``), with the expert index leading the
+    Pallas grid (kernels.grouped).
+
+    Layer stacking is structural: a stacked ExpertPackedStack simply
+    carries an extra leading layer dim on every child (groups' planes
+    ``(L, E_g, ...)``, dense ``(L, E_d, D_in, D_out)``), so it slices
+    through ``lax.scan`` / ``layer_slice_range`` like any packed leaf
+    and nests as a PackedStack group when per-layer bucketings differ.
+    """
+
+    groups: Tuple[PackedLinear, ...]
+    dense: Optional[Array]
+    members: Tuple[Tuple[int, ...], ...]
+    dense_members: Tuple[int, ...]
+    n_experts: int
+
+    def tree_flatten(self):
+        return ((self.groups, self.dense),
+                (self.members, self.dense_members, self.n_experts))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    def variant_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for grp, mem in zip(self.groups, self.members):
+            out[grp.variant] = out.get(grp.variant, 0) + len(mem)
+        return out
+
+
 def _is_packed_leaf(x) -> bool:
-    return isinstance(x, (PackedLinear, PackedStack))
+    return isinstance(x, (PackedLinear, PackedStack, ExpertPackedStack))
 
 
 def has_hetero(tree) -> bool:
@@ -234,7 +280,7 @@ def layer_slice(tree, l: int):
     def f(x):
         if isinstance(x, PackedStack):
             return x.at_layer(l)
-        if isinstance(x, PackedLinear):
+        if isinstance(x, (PackedLinear, ExpertPackedStack)):
             return jax.tree.map(lambda a: a[l], x)
         return x[l]
     return jax.tree.map(f, tree, is_leaf=_is_packed_leaf)
@@ -273,7 +319,7 @@ def layer_slice_range(tree, lo: int, hi: int):
     def f(x):
         if isinstance(x, PackedStack):
             return x.segment(lo, hi)
-        if isinstance(x, PackedLinear):
+        if isinstance(x, (PackedLinear, ExpertPackedStack)):
             leaves = jax.tree.leaves(x)
             if lo == 0 and leaves and leaves[0].shape[0] == hi:
                 return x
@@ -298,7 +344,8 @@ def _stack_depth(pl: PackedLinear) -> int:
 
 
 def packed_linear_axes(pl: PackedLinear, stacked: bool = False,
-                       lr_shard_rank: int = LR_SHARD_RANK
+                       lr_shard_rank: int = LR_SHARD_RANK,
+                       _lead: Optional[Tuple[str, ...]] = None
                        ) -> PackedLinear:
     """The logical-axes tree of one packed linear: a PackedLinear with
     IDENTICAL static aux whose children are axes tuples, so it pairs
@@ -312,8 +359,13 @@ def packed_linear_axes(pl: PackedLinear, stacked: bool = False,
     a d_out that doesn't divide the mesh replicates via the planner's
     standard divisibility fallback (degraded-but-correct). ``u`` only
     shards at rank >= ``lr_shard_rank``; ``v (D_in, r)`` always
-    replicates (it contracts the replicated input features)."""
-    lead = ("layers",) if stacked else ()
+    replicates (it contracts the replicated input features).
+    ``_lead`` overrides the leading logical axes — the expert-stacked
+    variant passes ``(..., "experts")`` so expert planes prefer EP
+    ("experts" -> "model") and fall back to "packed_out" row sharding
+    via the planner's one-axis-per-spec rule when the bucket size
+    doesn't divide the mesh."""
+    lead = _lead if _lead is not None else (("layers",) if stacked else ())
 
     def ax(a, row_sharded=True):
         if a is None:
@@ -329,23 +381,62 @@ def packed_linear_axes(pl: PackedLinear, stacked: bool = False,
         d_out=pl.d_out, rank=pl.rank)
 
 
+def _expert_stack_depth(eps: ExpertPackedStack) -> int:
+    """0 for a per-layer ExpertPackedStack, 1 for a layer-stacked one
+    (every plane then carries layer + expert leading dims)."""
+    if eps.groups:
+        return _stack_depth(eps.groups[0]) - 1
+    return eps.dense.ndim - 3
+
+
+def expert_stack_axes(eps: ExpertPackedStack, stacked: bool = False,
+                      lr_shard_rank: int = LR_SHARD_RANK
+                      ) -> ExpertPackedStack:
+    """Axes tree of an ExpertPackedStack: each group's planes lead with
+    the expert dim ("experts" -> "model", expert parallelism) ahead of
+    the usual per-plane "packed_out" rows; the dense remainder is
+    model-orientation ``(E_d, D_in, D_out)``. When the bucket size
+    doesn't divide the mesh, the planner's divisibility fallback drops
+    "experts" and the spec row-shards on "packed_out" instead —
+    degraded-but-correct, mirroring the dense-path fallbacks."""
+    lead = (("layers",) if stacked else ()) + ("experts",)
+    groups = tuple(packed_linear_axes(g, lr_shard_rank=lr_shard_rank,
+                                      _lead=lead)
+                   for g in eps.groups)
+    dense = (lead + (None, "packed_out")
+             if eps.dense is not None else None)
+    return ExpertPackedStack(groups, dense, eps.members,
+                             eps.dense_members, eps.n_experts)
+
+
 def packed_stack_axes(ps: PackedStack,
                       lr_shard_rank: int = LR_SHARD_RANK) -> PackedStack:
-    """Axes tree of a PackedStack: per-group stacked PackedLinear axes
-    plus ``("layers", None, "packed_out")`` for the dense remainder
-    (model-orientation ``(run, D_in, D_out)`` — output dim last)."""
-    groups = tuple(packed_linear_axes(g, stacked=True,
-                                      lr_shard_rank=lr_shard_rank)
-                   for g in ps.groups)
-    dense = ("layers", None, "packed_out") if ps.dense is not None else None
+    """Axes tree of a PackedStack: per-group stacked PackedLinear (or
+    ExpertPackedStack) axes plus ``("layers", None, "packed_out")`` for
+    the dense remainder (model-orientation ``(run, D_in, D_out)`` —
+    output dim last; MoE remainders add an "experts" dim)."""
+    groups = tuple(
+        expert_stack_axes(g, stacked=True, lr_shard_rank=lr_shard_rank)
+        if isinstance(g, ExpertPackedStack)
+        else packed_linear_axes(g, stacked=True,
+                                lr_shard_rank=lr_shard_rank)
+        for g in ps.groups)
+    dense = None
+    if ps.dense is not None:
+        dense = (("layers", "experts", None, "packed_out")
+                 if ps.dense.ndim == 4 else ("layers", None, "packed_out"))
     return PackedStack(groups, dense, ps.members, ps.dense_members,
                        ps.n_layers)
 
 
 def packed_axes(leaf, lr_shard_rank: int = LR_SHARD_RANK):
-    """Axes tree for any packed leaf (PackedLinear or PackedStack)."""
+    """Axes tree for any packed leaf (PackedLinear, PackedStack, or
+    ExpertPackedStack)."""
     if isinstance(leaf, PackedStack):
         return packed_stack_axes(leaf, lr_shard_rank)
+    if isinstance(leaf, ExpertPackedStack):
+        return expert_stack_axes(leaf, stacked=_expert_stack_depth(leaf) > 0,
+                                 lr_shard_rank=lr_shard_rank)
     return packed_linear_axes(leaf, stacked=_stack_depth(leaf) > 0,
                               lr_shard_rank=lr_shard_rank)
 
@@ -377,7 +468,7 @@ def _dec_rank(dec: SLaBDecomposition) -> int:
 def _unstructured_kind(w_s: Array, itemsize: Optional[int] = None,
                        k_max: Optional[int] = None) -> str:
     """"ell" when row-padded ELL beats the dense bytes of this sparse
-    part (uint16-representable D_in included), else "dense".
+    part (uint32 ids absorb D_in beyond uint16), else "dense".
     ``itemsize`` is the SERVING value width (defaults to the dec's own
     dtype; the packer passes its pack dtype — a bf16 serve halves the
     dense bytes and tightens the ELL threshold to K_max < D_in/2).
@@ -394,12 +485,16 @@ def _unstructured_kind(w_s: Array, itemsize: Optional[int] = None,
 
 def variant_of(dec: SLaBDecomposition, pattern: Optional[str],
                itemsize: Optional[int] = None,
-               k_max: Optional[int] = None) -> Optional[str]:
+               k_max: Optional[int] = None,
+               has_s: Optional[bool] = None) -> Optional[str]:
     """Classify one decomposition into its packed-serving variant (None
     = not representable; stays dense). The binary term only counts when
     a low-rank factor exists — W_L ⊙ W_B with empty W_L is identically
     zero (see core.slab.low_rank_times_binary), so a lone W_B carries no
-    signal and the sparse part serves alone."""
+    signal and the sparse part serves alone. ``has_s`` (is the sparse
+    part non-zero) skips that device sync when the caller batched it —
+    ``pack_expert_stack`` classifies every expert from ONE fused
+    reduction."""
     if dec.w_s is None or dec.w_s.ndim != 2:
         return None
     rank = _dec_rank(dec)
@@ -411,7 +506,8 @@ def variant_of(dec: SLaBDecomposition, pattern: Optional[str],
         kind = ("nm" if pattern
                 else _unstructured_kind(dec.w_s, itemsize, k_max))
         return f"sparse-{kind}"
-    has_s = bool(dec.w_s.size) and bool(jnp.any(dec.w_s != 0))
+    if has_s is None:
+        has_s = bool(dec.w_s.size) and bool(jnp.any(dec.w_s != 0))
     kind = (("nm" if pattern
              else _unstructured_kind(dec.w_s, itemsize, k_max))
             if has_s else None)
@@ -540,6 +636,88 @@ def packed_matmul(x: Array, w: PackedLinear,
     return y.astype(x.dtype)
 
 
+def packed_matmul_grouped(x: Array, w: PackedLinear,
+                          interpret: Optional[bool] = None) -> Array:
+    """x (E, M, D_in) against an expert-stacked PackedLinear (every
+    plane leads with E) -> (E, M, D_out), one grouped-kernel launch
+    with the expert index leading the Pallas grid (kernels.grouped)."""
+    from repro.kernels import ops
+    var = w.variant
+    if var.endswith("-ell"):
+        kw = dict(bm=128, bn=_pick_block(_local_dim(w.d_out), 256),
+                  interpret=interpret)
+        if var == "sparse-ell":
+            y = ops.ell_matmul_g(x, w.sparse_vals, w.sparse_idx, **kw)
+        elif var == "lowrank-ell":
+            y = ops.ell_lr_matmul_g(x, w.sparse_vals, w.sparse_idx,
+                                    w.u, w.v, **kw)
+        else:
+            y = ops.slab_ell_matmul_g(x, w.sparse_vals, w.sparse_idx,
+                                      w.b_packed, w.u, w.v, **kw)
+        return y.astype(x.dtype)
+    mult = (w.m_pat or 1) * (32 if (w.b_packed is not None) else 1)
+    kw = dict(bm=128, bn=_pick_block(_local_dim(w.d_out), 256),
+              bk=_pick_block(w.d_in, 1024, mult), interpret=interpret)
+    if var == "slab-nm":
+        y = ops.slab_nm_matmul_g(x, w.sparse_vals, w.sparse_idx, w.m_pat,
+                                 w.b_packed, w.u, w.v, **kw)
+    elif var == "slab-dense":
+        y = ops.slab_matmul_g(x, w.sparse_vals.astype(x.dtype),
+                              w.b_packed, w.u, w.v, **kw)
+    elif var == "binlr":
+        y = ops.binlr_g(x, w.b_packed, w.u, w.v, **kw)
+    elif var == "lowrank-nm":
+        y = ops.slab_nm_lr_matmul_g(x, w.sparse_vals, w.sparse_idx,
+                                    w.m_pat, w.u, w.v, **kw)
+    elif var == "lowrank-dense":
+        y = ops.slab_lr_matmul_g(x, w.sparse_vals.astype(x.dtype),
+                                 w.u, w.v, **kw)
+    elif var == "lowrank":
+        # two skinny batched XLA matmuls — already minimal bytes
+        y = jnp.einsum("emk,ekr->emr", x.astype(jnp.float32),
+                       w.v.astype(jnp.float32))
+        y = jnp.einsum("emr,enr->emn", y, w.u.astype(jnp.float32))
+    elif var == "sparse-nm":
+        y = ops.nm_matmul_g(x, w.sparse_vals, w.sparse_idx, w.m_pat, **kw)
+    elif var == "sparse-dense":
+        y = jnp.einsum("emk,enk->emn", x, w.sparse_vals.astype(x.dtype))
+    else:
+        raise ValueError(f"unknown packed variant {var!r}")
+    return y.astype(x.dtype)
+
+
+def expert_matmul(x: Array, w: ExpertPackedStack,
+                  interpret: Optional[bool] = None) -> Array:
+    """Per-expert packed linear: x (E, M, D_in) -> (E, M, D_out).
+
+    One grouped-kernel launch per expert BUCKET: experts of a bucket
+    share packed shapes (same variant / rank / ELL pad width), so each
+    launch streams a contiguous (E_g, ...) plane stack. Expert ids are
+    static aux, so the bucket gathers/reorder resolve to constant-index
+    gathers at trace time; the common all-in-one-bucket case skips them
+    entirely."""
+    n = w.n_experts
+    if (len(w.groups) == 1 and not w.dense_members
+            and w.members[0] == tuple(range(n))):
+        return packed_matmul_grouped(x, w.groups[0], interpret)
+    parts: List[Array] = []
+    order: List[int] = []
+    for mem, grp in zip(w.members, w.groups):
+        xg = jnp.take(x, jnp.asarray(mem), axis=0)
+        parts.append(packed_matmul_grouped(xg, grp, interpret))
+        order.extend(mem)
+    if w.dense is not None:
+        xd = jnp.take(x, jnp.asarray(w.dense_members), axis=0)
+        parts.append(jnp.einsum("emk,ekn->emn", xd,
+                                w.dense.astype(x.dtype)).astype(x.dtype))
+        order.extend(w.dense_members)
+    y = jnp.concatenate(parts, axis=0)
+    inv = [0] * n
+    for pos, eid in enumerate(order):
+        inv[eid] = pos
+    return jnp.take(y, jnp.asarray(inv), axis=0)
+
+
 # q/k/v projections: output is a flat head*dh dim that the attention
 # layers immediately reshape per head — never constrain it flat.
 _FLAT_HEAD_TAPS = frozenset(("wq", "wk", "wv"))
@@ -616,7 +794,13 @@ def _pack_signature(pl: PackedLinear) -> Tuple:
     return aux + leaves
 
 
-def _describe(pl: PackedLinear) -> str:
+def _describe(pl) -> str:
+    if isinstance(pl, ExpertPackedStack):
+        parts = [f"{_describe(jax.tree.map(lambda a: a[0], g))} x{len(m)}"
+                 for g, m in zip(pl.groups, pl.members)]
+        if pl.dense_members:
+            parts.append(f"dense x{len(pl.dense_members)}")
+        return "experts[" + " | ".join(parts) + "]"
     d = pl.variant
     if pl.m_pat:
         d += f"({pl.sparse_vals.shape[-1]}:{pl.m_pat})"
@@ -625,6 +809,86 @@ def _describe(pl: PackedLinear) -> str:
     if pl.rank:
         d += f" r{pl.rank}"
     return d
+
+
+def _leaf_signature(leaf) -> Tuple:
+    """Layer-stacking key for any per-layer packed leaf."""
+    if isinstance(leaf, ExpertPackedStack):
+        return (("experts", leaf.members, leaf.dense_members,
+                 leaf.n_experts)
+                + tuple(_pack_signature(g) for g in leaf.groups)
+                + ((None if leaf.dense is None
+                    else (leaf.dense.shape, str(leaf.dense.dtype))),))
+    return _pack_signature(leaf)
+
+
+# How many quantization buckets the per-expert realized ELL K_max is
+# split into: within a bucket experts pad to the bucket's realized max,
+# so a few hot experts don't inflate every expert's pad width, while
+# the number of grouped-kernel launches stays bounded.
+EXPERT_KMAX_BUCKETS = 4
+
+
+def pack_expert_stack(old: Array,
+                      e_decs: Tuple[SLaBDecomposition, ...],
+                      pattern: Optional[str],
+                      dtype=jnp.float32,
+                      n_buckets: int = EXPERT_KMAX_BUCKETS
+                      ) -> ExpertPackedStack:
+    """Pack one layer's 3-D MoE leaf from its per-expert decompositions.
+
+    ``old`` is the model-orientation ``(E, D_in, D_out)`` expert leaf
+    (kept for unservable experts' dense slices); ``e_decs`` the
+    per-expert paper-orientation decs the pipeline produced. All
+    experts classify from ONE fused device sync (per-expert realized
+    row-nnz K_max + total nnz); ELL experts then bucket by quantized
+    K_max — bucket width ``ceil(global_max / n_buckets)`` — and every
+    bucket pads to its own realized max. Experts sharing a full packed
+    signature stack into one grouped-kernel launch."""
+    n_exp = len(e_decs)
+    itemsize = jnp.dtype(dtype).itemsize
+    # experts with no sparse plane at all (w_s=None decs) can't join the
+    # fused nnz sync — they classify straight to the dense remainder
+    servable = [e for e, d in enumerate(e_decs)
+                if d.w_s is not None and d.w_s.ndim == 2]
+    kmaxes = [1] * n_exp
+    variants: List[Optional[str]] = [None] * n_exp
+    if servable:
+        ws = jnp.stack([e_decs[e].w_s for e in servable])
+        row_nnz, tot_nnz = jax.device_get(
+            (jnp.max(jnp.sum(ws != 0, axis=-1), axis=-1),
+             jnp.sum(ws != 0, axis=(1, 2))))
+        for i, e in enumerate(servable):
+            kmaxes[e] = max(1, int(row_nnz[i]))
+            variants[e] = variant_of(e_decs[e], pattern, itemsize,
+                                     k_max=kmaxes[e],
+                                     has_s=bool(tot_nnz[i]))
+    q = max(1, -(-max(kmaxes) // n_buckets))
+    pads: Dict[int, int] = {}
+    for e, var in enumerate(variants):
+        if var is not None and var.endswith("-ell"):
+            b = (kmaxes[e] - 1) // q
+            pads[b] = max(pads.get(b, 0), kmaxes[e])
+    by_sig: Dict[Tuple, List[Tuple[int, PackedLinear]]] = {}
+    dense_members: List[int] = []
+    for e, (dec, var) in enumerate(zip(e_decs, variants)):
+        if var is None:
+            dense_members.append(e)
+            continue
+        nnz = (pads[(kmaxes[e] - 1) // q] if var.endswith("-ell")
+               else kmaxes[e])
+        pl = pack_linear(dec, pattern, dtype, variant=var, ell_nnz=nnz)
+        by_sig.setdefault(_pack_signature(pl), []).append((e, pl))
+    groups: List[PackedLinear] = []
+    members: List[Tuple[int, ...]] = []
+    for key in sorted(by_sig, key=str):
+        es = by_sig[key]
+        groups.append(_stack_group([pl for (_, pl) in es]))
+        members.append(tuple(e for (e, _) in es))
+    dense = (jnp.stack([old[e] for e in dense_members])
+             if dense_members else None)
+    return ExpertPackedStack(tuple(groups), dense, tuple(members),
+                             tuple(dense_members), n_exp)
 
 
 def _model_segments(layers_tree, n_layers: int,
@@ -680,19 +944,51 @@ def pack_plan_decs(params: dict,
     per-variant axes tree (``packed_axes``) the moment it is built —
     leaves are *born sharded* instead of replicated then resharded —
     and the per-segment slice cache is warmed after placement, so the
-    pre-sliced scan inputs carry the shards too. Returns
-    (params, PackReport); a warning is emitted for any packed variant
-    whose measured bytes exceed its dense footprint."""
+    pre-sliced scan inputs carry the shards too.
+
+    3-D MoE leaves arrive as TUPLES of per-expert decs (the pipeline's
+    expert branch) and pack into per-layer ``ExpertPackedStack``s
+    (K_max-bucketed grouped-kernel launches); hybrid shared-block decs
+    arrive under ``shared.*`` names (keyed at the firing layer) and
+    pack once into ``params["shared_attn"]``. Still-dense bytes —
+    unservable decs, plan-uncovered layers of packed paths, and
+    unservable experts — aggregate under the ``"dense-fallback"``
+    pseudo-variant so the bytes summary reflects true model bytes for
+    partially packed models. Returns (params, PackReport); a warning is
+    emitted for any packed variant whose measured bytes exceed its
+    dense footprint."""
     from repro.core.pipeline import _get, _set
 
     pack_itemsize = jnp.dtype(dtype).itemsize
     by_path: Dict[str, Dict[Tuple,
                             List[Tuple[int, PackedLinear]]]] = {}
+    expert_by_path: Dict[str, Dict[int, ExpertPackedStack]] = {}
+    shared_pls: List[Tuple[int, str, PackedLinear]] = []
     fallback: List[Tuple[int, str]] = []
+    n_packed = 0
+    by_variant: Dict[str, int] = {}
+    bytes_by_variant: Dict[str, List[float]] = {}
+
+    def _agg(var: str, packed_b: float, dense_b: float, n: int = 1):
+        a = bytes_by_variant.setdefault(var, [0.0, 0.0, 0])
+        a[0] += packed_b
+        a[1] += dense_b
+        a[2] += n
+
     for (l, name) in sorted(decs, key=lambda k: (k[1], k[0])):
         dec = decs[(l, name)]
         r = plan.resolve(l, name)
         pattern = r.scfg.pattern if r is not None else None
+        # a plain tuple of per-expert decs marks a 3-D MoE leaf
+        # (SLaBDecomposition itself is a NamedTuple — exact type check)
+        if type(dec) is tuple:
+            old = _get(params["layers"], name)
+            if old is None:
+                fallback.append((l, name))
+                continue
+            expert_by_path.setdefault(name, {})[l] = \
+                pack_expert_stack(old[l], dec, pattern, dtype)
+            continue
         # the row-nnz device sync is LAZY: a pipeline-supplied dense-kind
         # variant at matching dtypes pays zero extra syncs, and an
         # ELL-routed linear pays exactly one (shared by the dtype
@@ -717,13 +1013,13 @@ def pack_plan_decs(params: dict,
             k_max = ell_row_nnz_max(dec.w_s)
         pl = pack_linear(dec, pattern, dtype, variant=var,
                          ell_nnz=k_max if var.endswith("-ell") else None)
+        if name.startswith("shared."):
+            shared_pls.append((l, name, pl))
+            continue
         by_path.setdefault(name, {}).setdefault(
             _pack_signature(pl), []).append((l, pl))
 
     out = jax.tree.map(lambda a: a, params)     # shallow copy
-    n_packed = 0
-    by_variant: Dict[str, int] = {}
-    bytes_by_variant: Dict[str, List[float]] = {}
     packed_paths: List[str] = []
     for name, groups in sorted(by_path.items()):
         old = _get(out["layers"], name)
@@ -741,11 +1037,9 @@ def pack_plan_decs(params: dict,
             members.append(tuple(l for (l, _) in layers))
             by_variant[var] = by_variant.get(var, 0) + len(layers)
             n_packed += len(layers)
-            agg = bytes_by_variant.setdefault(var, [0.0, 0.0, 0])
             for (_, pl) in layers:
-                agg[0] += sum(a.nbytes for a in jax.tree.leaves(pl))
-                agg[1] += per_dense
-                agg[2] += 1
+                _agg(var, sum(a.nbytes for a in jax.tree.leaves(pl)),
+                     per_dense)
         covered = {l for mem in members for l in mem}
         missing = tuple(l for l in range(n_layers) if l not in covered)
         if not missing and len(stacked_groups) == 1:
@@ -755,6 +1049,9 @@ def pack_plan_decs(params: dict,
                      if missing else None)
             leaf = PackedStack(tuple(stacked_groups), dense,
                                tuple(members), missing, n_layers)
+            if missing:
+                _agg("dense-fallback", per_dense * len(missing),
+                     per_dense * len(missing), len(missing))
         if planner is not None:
             # pack AFTER placement: the leaf materializes with its
             # per-variant NamedShardings rather than being replicated
@@ -763,6 +1060,77 @@ def pack_plan_decs(params: dict,
                 leaf, planner.tree_shardings(packed_axes(leaf), leaf))
         _set(out["layers"], name, leaf)
         packed_paths.append(name)
+
+    # ---- expert-axis (3-D MoE) paths ----
+    for name, per_layer in sorted(expert_by_path.items()):
+        old = _get(out["layers"], name)
+        per_dense_e = old.nbytes / (old.shape[0] * old.shape[1])
+        by_sig: Dict[Tuple, List[Tuple[int, ExpertPackedStack]]] = {}
+        for l, eps in sorted(per_layer.items()):
+            for grp, mem in zip(eps.groups, eps.members):
+                var = grp.variant
+                by_variant[var] = by_variant.get(var, 0) + len(mem)
+                n_packed += len(mem)
+                _agg(var, sum(a.nbytes for a in jax.tree.leaves(grp)),
+                     per_dense_e * len(mem), len(mem))
+            for e in eps.dense_members:
+                fallback.append((l, f"{name}[expert {e}]"))
+                _agg("dense-fallback", per_dense_e, per_dense_e)
+            by_sig.setdefault(_leaf_signature(eps), []).append((l, eps))
+        stacked_groups = []
+        members = []
+        for key in sorted(by_sig, key=str):
+            ls = by_sig[key]
+            stacked_groups.append(_stack_group([e for (_, e) in ls]))
+            members.append(tuple(l for (l, _) in ls))
+        covered = {l for mem in members for l in mem}
+        missing = tuple(l for l in range(n_layers) if l not in covered)
+        if not missing and len(stacked_groups) == 1:
+            leaf = stacked_groups[0]            # one-scan fast path
+        else:
+            dense = (jnp.stack([old[l] for l in missing])
+                     if missing else None)
+            leaf = PackedStack(tuple(stacked_groups), dense,
+                               tuple(members), missing, n_layers)
+            if missing:
+                n_e = old.shape[1]
+                _agg("dense-fallback", per_dense_e * n_e * len(missing),
+                     per_dense_e * n_e * len(missing), n_e * len(missing))
+        if planner is not None:
+            leaf = jax.device_put(
+                leaf, planner.tree_shardings(packed_axes(leaf), leaf))
+        _set(out["layers"], name, leaf)
+        packed_paths.append(name)
+
+    # ---- hybrid shared-block paths (packed once, outside the stack) ----
+    for l, name, pl in sorted(shared_pls, key=lambda t: t[1]):
+        sub = name.split(".", 1)[1]
+        old = _get(out.get("shared_attn", {}), sub)
+        if old is None:
+            fallback.append((l, name))
+            continue
+        if planner is not None:
+            pl = jax.device_put(
+                pl, planner.tree_shardings(packed_axes(pl), pl))
+        _set(out["shared_attn"], sub, pl)
+        by_variant[pl.variant] = by_variant.get(pl.variant, 0) + 1
+        n_packed += 1
+        _agg(pl.variant, sum(a.nbytes for a in jax.tree.leaves(pl)),
+             float(old.nbytes))
+        packed_paths.append(name)
+
+    # unservable decs stayed dense: their bytes count toward the model too
+    for (l, fname) in fallback:
+        base = fname.split("[", 1)[0]
+        if base.startswith("shared."):
+            w = _get(out.get("shared_attn", {}), base.split(".", 1)[1])
+            if w is not None and not isinstance(w, PackedLinear):
+                _agg("dense-fallback", float(w.nbytes), float(w.nbytes))
+        elif "[expert " not in fname:           # expert slices counted above
+            wp = _get(params["layers"], base)
+            if wp is not None:
+                _agg("dense-fallback", wp.nbytes / wp.shape[0],
+                     wp.nbytes / wp.shape[0])
 
     per_linear = {var: (p / n, d / n)
                   for var, (p, d, n) in bytes_by_variant.items()}
@@ -773,7 +1141,8 @@ def pack_plan_decs(params: dict,
                 f"bytes ({p / 1e3:.1f} kB vs {d / 1e3:.1f} kB per linear)"
                 " — this format loses on the serving roofline",
                 stacklevel=2)
-    segments = _model_segments(out["layers"], n_layers, packed_paths)
+    layer_paths = [p for p in packed_paths if not p.startswith("shared.")]
+    segments = _model_segments(out["layers"], n_layers, layer_paths)
     # pre-slice every (stack, run) pair once, at pack time: decode-step
     # traces then reuse the memoized (and, under a planner, sharded)
     # segment leaves instead of re-slicing the layer axis per trace
@@ -805,6 +1174,8 @@ def pack_model(params: dict,
     for path in paths:
         if any((l, path) not in decs for l in range(n_layers)):
             continue                             # partial coverage: skip
+        if any(type(decs[(l, path)]) is tuple for l in range(n_layers)):
+            continue         # 3-D expert tuples need pack_plan_decs
         variants = [variant_of(decs[(l, path)], pattern, itemsize)
                     for l in range(n_layers)]
         if len(set(variants)) != 1 or variants[0] is None:

@@ -6,8 +6,9 @@ stream from HBM.
 - N:M packed:  W_S (2:4 / 4:8) -> values (Do, Di*n/m) + int8 indices
                (position of each kept element inside its m-group).
 - ELL packed:  unstructured W_S -> row-padded values (Do, K_max) +
-               uint16 column indices, K_max = realized max per-row nnz
-               (short rows pad with value 0 at a zero column).
+               uint16 column indices (uint32 when D_in > 65535),
+               K_max = realized max per-row nnz (short rows pad with
+               value 0 at a zero column).
 """
 from __future__ import annotations
 
@@ -101,8 +102,9 @@ def nm_packed_bits(p: NMPacked, bits: int = 16) -> int:
 
 class ELLPacked(NamedTuple):
     values: Array   # (Do, K_max)
-    indices: Array  # (Do, K_max) uint16 column ids (2 bytes — the reason
-    d_in: int       # ELL beats dense bytes at 50% unstructured sparsity)
+    indices: Array  # (Do, K_max) column ids: uint16 (2 bytes — the reason
+    d_in: int       # ELL beats dense bytes at 50% unstructured sparsity),
+                    # widened to uint32 when D_in overflows 16 bits.
 
 
 def ell_row_nnz_max(w_s: Array) -> int:
@@ -111,29 +113,36 @@ def ell_row_nnz_max(w_s: Array) -> int:
     return max(1, int(jnp.max(jnp.sum(w_s != 0, axis=1))))
 
 
-_ELL_MAX_DIN = 2 ** 16   # uint16 column ids; wider linears stay dense
+_ELL_MAX_DIN = 2 ** 16   # uint16 column-id ceiling; wider rows use uint32
+
+
+def ell_idx_itemsize(d_in: int) -> int:
+    """Bytes per ELL column index: 2 (uint16) while indices fit 16 bits,
+    4 (uint32) for wider linears (e.g. nemotron_4_340b d_ff)."""
+    return 2 if d_in <= _ELL_MAX_DIN else 4
 
 
 def ell_wins_bytes(k_max: int, d_in: int, itemsize: int = 4) -> bool:
-    """True when row-padded ELL (values at ``itemsize`` bytes + uint16
-    indices) stores strictly fewer bytes than the dense matrix."""
-    return d_in <= _ELL_MAX_DIN and k_max * (itemsize + 2) < d_in * itemsize
+    """True when row-padded ELL (values at ``itemsize`` bytes + uint16 or
+    uint32 indices, whichever D_in requires) stores strictly fewer bytes
+    than the dense matrix."""
+    return k_max * (itemsize + ell_idx_itemsize(d_in)) < d_in * itemsize
 
 
 def ell_pack(w_s: Array, nnz: int | None = None) -> ELLPacked:
     """Row-padded ELL: keep each row's ``nnz`` largest-magnitude entries
     (default: the realized per-row max, so nothing is dropped). Short
-    rows pad with (value 0, index of some zero column)."""
+    rows pad with (value 0, index of some zero column). Column indices
+    are uint16, widened to uint32 when D_in > 65535 (they would wrap)."""
     d_out, d_in = w_s.shape
-    if d_in > _ELL_MAX_DIN:
-        raise ValueError(f"D_in={d_in} overflows uint16 ELL indices")
+    idx_dtype = jnp.uint16 if d_in <= _ELL_MAX_DIN else jnp.uint32
     if nnz is None:
         nnz = ell_row_nnz_max(w_s)
     keys = jnp.where(w_s != 0, -jnp.abs(w_s.astype(jnp.float32)), jnp.inf)
     idx = jnp.argsort(keys, axis=1)[:, :nnz].astype(jnp.int32)
     idx = jnp.sort(idx, axis=1)
     vals = jnp.take_along_axis(w_s, idx, axis=1)
-    return ELLPacked(vals, idx.astype(jnp.uint16), d_in)
+    return ELLPacked(vals, idx.astype(idx_dtype), d_in)
 
 
 def ell_unpack(p: ELLPacked) -> Array:

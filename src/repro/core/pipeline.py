@@ -307,7 +307,7 @@ def _compress_leaf(layer: int, pth: str, w: Array, an: Optional[Array],
     comp = r.compressor
     if w.ndim == 3:        # MoE experts (E, D, F): per-expert
         hz_e = _expert_hessians(hz, w.shape[0], w.shape[1])
-        outs, crs = [], []
+        outs, crs, e_decs = [], [], []
         eb2 = ea2 = 0.0
         for e in range(w.shape[0]):
             an_e = an[e] if (an is not None and an.ndim == 2) else an
@@ -315,6 +315,7 @@ def _compress_leaf(layer: int, pth: str, w: Array, an: Optional[Array],
                                LinearStats(norms=an_e, hessian=hz_e[e]))
             o = cl.dense.T.astype(w.dtype)
             outs.append(o)
+            e_decs.append(cl.dec)
             if cl.cr is not None:
                 crs.append(cl.cr)
             b_e, a_e = _weighted_errs(w[e], o, an_e)
@@ -322,10 +323,14 @@ def _compress_leaf(layer: int, pth: str, w: Array, an: Optional[Array],
             ea2 += a_e ** 2
         w_new = jnp.stack(outs)
         cr = float(np.mean(crs)) if crs else comp.scfg.cr
+        # the per-expert decs travel as a tuple — pack_plan_decs routes
+        # 3-D leaves to pack_expert_stack (expert-axis grouped kernels)
+        dec = tuple(e_decs) if all(d is not None for d in e_decs) else None
         st = CompressStats(layer, pth, float(np.sqrt(eb2)),
                            float(np.sqrt(ea2)), cr, r.method,
+                           "expert" if dec is not None else "",
                            cr_requested=float(r.scfg.cr))
-        return w_new, None, st
+        return w_new, dec, st
     cl = comp.compress(w.T.astype(jnp.float32),
                        LinearStats(norms=an, hessian=hz))
     w_new = cl.dense.T.astype(w.dtype)
@@ -439,8 +444,12 @@ def compress_model(cfg: ArchConfig, params: dict, calib,
                 w = _get(sp, sub)
                 if r is None or w is None:
                     continue
-                w_new, _, st = _compress_leaf(l, pth, w, acts.get(pth),
-                                              hess.get(pth), r)
+                w_new, dec, st = _compress_leaf(l, pth, w, acts.get(pth),
+                                                hess.get(pth), r)
+                if keep_decompositions and dec is not None:
+                    # keyed at the firing layer under the "shared." path;
+                    # pack_plan_decs packs these into params["shared_attn"]
+                    decs[(l, pth)] = dec
                 out_stats.append(st)
                 _set(sp, sub, w_new)
                 changed = True

@@ -189,6 +189,157 @@ def slab_ell_matmul(x: Array, vals: Array, idx: Array, b_packed: Array,
     return y[:m].reshape(*lead, -1)
 
 
+# ------------------- grouped-expert (MoE) wrappers ---------------------
+#
+# x carries a leading expert dim (E, M, K) — the flattened post-dispatch
+# capacity buffer — and every weight plane is expert-stacked. Token
+# padding happens on axis 1; the expert axis is never padded (one grid
+# step per expert).
+
+def _pad_tokens_g(x: Array, mult: int) -> Array:
+    m = x.shape[1]
+    pad = (-m) % mult
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    return x
+
+
+def _rank_stack_g(u: Array, v: Array):
+    """Expert-stacked (E,N,R) u / (E,K,R) v -> kernel layout (E,R,N) /
+    (E,R,K)."""
+    return u.transpose(0, 2, 1), v.transpose(0, 2, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def ell_matmul_g(x: Array, vals: Array, idx: Array,
+                 bm: int = 128, bn: int = 256,
+                 interpret: Optional[bool] = None) -> Array:
+    """Grouped-expert ELL matmul: x (E, M, K), vals/idx (E, N, K_max)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    m = x.shape[1]
+    x2 = _pad_tokens_g(x, min(bm, max(m, 1)))
+    from repro.kernels import grouped as g_k
+    y = g_k.ell_matmul_g(x2, vals, idx, bm=bm, bn=bn, interpret=interpret)
+    return y[:, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def ell_lr_matmul_g(x: Array, vals: Array, idx: Array, u: Array, v: Array,
+                    bm: int = 128, bn: int = 256,
+                    interpret: Optional[bool] = None) -> Array:
+    interpret = _on_cpu() if interpret is None else interpret
+    u, v = _rank_stack_g(u, v)
+    m = x.shape[1]
+    x2 = _pad_tokens_g(x, min(bm, max(m, 1)))
+    from repro.kernels import grouped as g_k
+    y = g_k.ell_lr_matmul_g(x2, vals, idx, u, v, bm=bm, bn=bn,
+                            interpret=interpret)
+    return y[:, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def slab_ell_matmul_g(x: Array, vals: Array, idx: Array, b_packed: Array,
+                      u: Array, v: Array,
+                      bm: int = 128, bn: int = 256,
+                      interpret: Optional[bool] = None) -> Array:
+    interpret = _on_cpu() if interpret is None else interpret
+    u, v = _rank_stack_g(u, v)
+    m = x.shape[1]
+    x2 = _pad_tokens_g(x, min(bm, max(m, 1)))
+    from repro.kernels import grouped as g_k
+    y = g_k.slab_ell_matmul_g(x2, vals, idx, b_packed, u, v, bm=bm, bn=bn,
+                              interpret=interpret)
+    return y[:, :m]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m_pat", "bm", "bn", "bk", "interpret"))
+def nm_matmul_g(x: Array, vals: Array, idx: Array, m_pat: int,
+                bm: int = 256, bn: int = 256, bk: int = 512,
+                interpret: Optional[bool] = None) -> Array:
+    interpret = _on_cpu() if interpret is None else interpret
+    m = x.shape[1]
+    x2 = _pad_tokens_g(x, min(bm, max(m, 1)))
+    from repro.kernels import grouped as g_k
+    y = g_k.nm_matmul_g(x2, vals, idx, m_pat, bm=bm, bn=bn, bk=bk,
+                        interpret=interpret)
+    return y[:, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def slab_matmul_g(x: Array, w_s: Array, b_packed: Array, u: Array, v: Array,
+                  bm: int = 256, bn: int = 256, bk: int = 512,
+                  interpret: Optional[bool] = None) -> Array:
+    interpret = _on_cpu() if interpret is None else interpret
+    u, v = _rank_stack_g(u, v)
+    m = x.shape[1]
+    x2 = _pad_tokens_g(x, min(bm, max(m, 1)))
+    from repro.kernels import grouped as g_k
+    y = g_k.slab_matmul_g(x2, w_s, b_packed, u, v, bm=bm, bn=bn, bk=bk,
+                          interpret=interpret)
+    return y[:, :m]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m_pat", "bm", "bn", "bk", "interpret"))
+def slab_nm_matmul_g(x: Array, vals: Array, idx: Array, m_pat: int,
+                     b_packed: Array, u: Array, v: Array,
+                     bm: int = 256, bn: int = 256, bk: int = 512,
+                     interpret: Optional[bool] = None) -> Array:
+    interpret = _on_cpu() if interpret is None else interpret
+    u, v = _rank_stack_g(u, v)
+    m = x.shape[1]
+    x2 = _pad_tokens_g(x, min(bm, max(m, 1)))
+    from repro.kernels import grouped as g_k
+    y = g_k.slab_nm_matmul_g(x2, vals, idx, m_pat, b_packed, u, v,
+                             bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return y[:, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def slab_lr_matmul_g(x: Array, w_s: Array, u: Array, v: Array,
+                     bm: int = 256, bn: int = 256, bk: int = 512,
+                     interpret: Optional[bool] = None) -> Array:
+    interpret = _on_cpu() if interpret is None else interpret
+    u, v = _rank_stack_g(u, v)
+    m = x.shape[1]
+    x2 = _pad_tokens_g(x, min(bm, max(m, 1)))
+    from repro.kernels import grouped as g_k
+    y = g_k.slab_lr_matmul_g(x2, w_s, u, v, bm=bm, bn=bn, bk=bk,
+                             interpret=interpret)
+    return y[:, :m]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m_pat", "bm", "bn", "bk", "interpret"))
+def slab_nm_lr_matmul_g(x: Array, vals: Array, idx: Array, m_pat: int,
+                        u: Array, v: Array,
+                        bm: int = 256, bn: int = 256, bk: int = 512,
+                        interpret: Optional[bool] = None) -> Array:
+    interpret = _on_cpu() if interpret is None else interpret
+    u, v = _rank_stack_g(u, v)
+    m = x.shape[1]
+    x2 = _pad_tokens_g(x, min(bm, max(m, 1)))
+    from repro.kernels import grouped as g_k
+    y = g_k.slab_nm_lr_matmul_g(x2, vals, idx, m_pat, u, v,
+                                bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return y[:, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def binlr_g(x: Array, b_packed: Array, u: Array, v: Array,
+            bm: int = 256, bn: int = 256, bk: int = 512,
+            interpret: Optional[bool] = None) -> Array:
+    interpret = _on_cpu() if interpret is None else interpret
+    u, v = _rank_stack_g(u, v)
+    m = x.shape[1]
+    x2 = _pad_tokens_g(x, min(bm, max(m, 1)))
+    from repro.kernels import grouped as g_k
+    y = g_k.binlr_matmul_g(x2, b_packed, u, v, bm=bm, bn=bn, bk=bk,
+                           interpret=interpret)
+    return y[:, :m]
+
+
 def flash_decode_attention(q: Array, k: Array, v: Array, lengths: Array,
                            k_scale: Optional[Array] = None,
                            v_scale: Optional[Array] = None,

@@ -20,11 +20,26 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.packed_model import ExpertPackedStack, expert_matmul
 from repro.models.common import (ArchConfig, dense_init, tap_record,
                                  tap_record_stacked, tap_scope)
 from repro.models import mlp as mlp_lib
 
 Array = jax.Array
+
+
+def _expert_apply(x4: Array, w) -> Array:
+    """Batched per-expert linear on the post-dispatch buffer: x4
+    (G, E, C, D_in) -> (G, E, C, D_out). ``w`` is either the dense
+    (E, D_in, D_out) expert leaf (einsum — XLA batched matmul) or an
+    ``ExpertPackedStack``, served by the grouped-expert Pallas kernels
+    (one launch per expert bucket, expert index in the grid)."""
+    if isinstance(w, ExpertPackedStack):
+        g, e, c, d = x4.shape
+        xe = x4.transpose(1, 0, 2, 3).reshape(e, g * c, d)
+        y = expert_matmul(xe, w)
+        return y.reshape(e, g, c, -1).transpose(1, 0, 2, 3)
+    return jnp.einsum("gecd,edf->gecf", x4, w)
 
 
 def moe_axes(cfg: ArchConfig) -> dict:
@@ -102,10 +117,10 @@ def moe_ffn(cfg: ArchConfig, p: dict, x: Array) -> Tuple[Array, Array]:
     # included), with unused capacity slots contributing zero rows.
     tap_record_stacked("w_gate", expert_in, stack_axis=1)
     tap_record_stacked("w_up", expert_in, stack_axis=1)
-    h = jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"])
-    h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"])
+    h = _expert_apply(expert_in, p["w_gate"])
+    h = jax.nn.silu(h) * _expert_apply(expert_in, p["w_up"])
     tap_record_stacked("w_down", h, stack_axis=1)
-    expert_out = jnp.einsum("gecf,efd->gecd", h, p["w_down"])     # (G,E,C,D)
+    expert_out = _expert_apply(h, p["w_down"])                    # (G,E,C,D)
     y = jnp.einsum("gtec,gecd->gtd", combine, expert_out)
     y = y.reshape(b, s, d)
 

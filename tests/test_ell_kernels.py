@@ -50,9 +50,16 @@ def test_ell_pack_realized_kmax_roundtrip():
     np.testing.assert_allclose(np.asarray(ell_unpack(p)), np.asarray(ws))
 
 
-def test_ell_pack_rejects_wide_din():
-    with pytest.raises(ValueError, match="uint16"):
-        ell_pack(jnp.zeros((2, 2 ** 16 + 32), jnp.float32))
+def test_ell_pack_wide_din_uses_uint32():
+    """D_in past 65535 would wrap uint16 ids; the packer widens to
+    uint32 and round-trips columns above the uint16 ceiling exactly."""
+    d_in = 2 ** 16 + 64
+    ws = jnp.zeros((2, d_in), jnp.float32)
+    ws = ws.at[0, d_in - 1].set(1.5).at[1, 7].set(-2.0)
+    p = ell_pack(ws)
+    assert p.indices.dtype == jnp.uint32
+    assert int(p.indices[0, 0]) == d_in - 1
+    np.testing.assert_allclose(np.asarray(ell_unpack(p)), np.asarray(ws))
 
 
 def test_variant_routing_follows_pack_itemsize():
@@ -75,7 +82,10 @@ def test_ell_wins_bytes_threshold():
     assert not ell_wins_bytes(86, 128, itemsize=4)   # 86*6 > 512
     assert ell_wins_bytes(63, 128, itemsize=2)
     assert not ell_wins_bytes(64, 128, itemsize=2)   # exact tie loses
-    assert not ell_wins_bytes(8, 2 ** 16 + 32, itemsize=4)  # uint16 cap
+    # Past the uint16 ceiling indices cost 4 bytes: win iff K_max < D_in/2.
+    wide = 2 ** 16 + 32
+    assert ell_wins_bytes(wide // 2 - 16, wide, itemsize=4)
+    assert not ell_wins_bytes(wide // 2, wide, itemsize=4)
 
 
 # ------------------------------------------------------------------
