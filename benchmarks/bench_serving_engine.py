@@ -1,4 +1,5 @@
-"""Continuous batching vs static batching under open-loop traffic.
+"""Continuous batching vs static batching under open-loop traffic,
+plus a degraded-mode (chaos) row.
 
 Replays ONE synthetic Poisson arrival trace (mixed prompt/output
 lengths) two ways over the same weights:
@@ -17,7 +18,16 @@ lengths) two ways over the same weights:
               is its batch's completion time minus its arrival —
               tokens only materialize when the whole batch returns.
 
-Both paths compile outside the timed region (a warmup trace for the
+A third pass replays the SAME trace through the engine under a fixed
+``FaultPlan.chaos`` seed (pool shrink + forced NaNs + an arrival
+burst — ``serving/faults.py``): the ``degraded`` row reports tok/s and
+GOODPUT (finished-stream tokens/s) with per-status counts, gated by
+``check()`` to >= 0.7x the fault-free engine throughput — graceful
+degradation, quantified. Finished non-burst streams must still match
+the fault-free token streams (replay-after-fault is token-exact), and
+the block pool must come back whole (no leaks).
+
+All paths compile outside the timed region (a warmup trace for the
 engine's two step shapes, a warmup call per static batch shape), so
 the comparison is steady-state serving, not compile time.
 
@@ -38,7 +48,7 @@ import numpy as np
 from repro import configs
 from repro.launch.serve import greedy_decode
 from repro.models import lm
-from repro.serving import Engine, EngineConfig, Request
+from repro.serving import Engine, EngineConfig, FaultPlan, Request
 from repro.serving.engine import summarize
 
 from benchmarks.common import emit
@@ -51,6 +61,8 @@ PROMPT_RANGE = (6, 24)        # tokens, inclusive-exclusive
 MAX_NEW_RANGE = (4, 13)
 MEAN_INTERARRIVAL_S = 0.15
 SEED = 0
+CHAOS_SEED = 0                # the degraded row's FaultPlan seed
+GOODPUT_FLOOR = 0.7           # degraded goodput >= floor * fault-free
 
 
 def _trace(cfg, seed=SEED):
@@ -81,17 +93,19 @@ def _engine_cfg():
         max_len=max_len, prefill_chunk=8)
 
 
-def _run_continuous(cfg, params, reqs):
+def _run_continuous(cfg, params, reqs, faults=None):
     eng = Engine(cfg, params, _engine_cfg())
     # warmup: compile both step shapes (chunk C and 1) off the clock
     warm = [Request(rid=-1, prompt=np.zeros(9, np.int32), max_new=3,
                     arrival=0.0)]
     eng.run(warm, clock="steps")
     t0 = time.monotonic()
-    eng.run(reqs, clock="wall")
-    m = summarize(reqs, time.monotonic() - t0)
+    done = eng.run(reqs, clock="wall", faults=faults)
+    m = summarize(done, time.monotonic() - t0)
     m["n_steps"] = eng.n_steps
-    return m
+    m["no_block_leak"] = (eng.sched.alloc.n_free == eng.ecfg.n_blocks
+                          and not eng.sched.slots)
+    return m, done
 
 
 def _static_batches(reqs):
@@ -154,7 +168,7 @@ def run():
     trace = _trace(cfg)
 
     cont_reqs = _fresh(trace)
-    cont = _run_continuous(cfg, params, cont_reqs)
+    cont, _ = _run_continuous(cfg, params, cont_reqs)
     stat_reqs = _fresh(trace)
     stat = _run_static(cfg, params, stat_reqs)
 
@@ -162,6 +176,19 @@ def run():
     by_rid = {r.rid: r for r in stat_reqs}
     streams_match = all(
         r.out == by_rid[r.rid].out for r in cont_reqs)
+
+    # degraded mode: the same trace under a fixed chaos seed
+    faults = FaultPlan.chaos(CHAOS_SEED, vocab=cfg.vocab,
+                             n_rows=N_SLOTS, horizon=40)
+    deg_reqs = _fresh(trace)
+    deg, deg_done = _run_continuous(cfg, params, deg_reqs,
+                                    faults=faults)
+    deg["chaos_seed"] = CHAOS_SEED
+    deg["fault_plan"] = repr(faults)
+    # finished non-burst streams must replay token-exact vs fault-free
+    deg["surviving_streams_match"] = all(
+        r.out == by_rid[r.rid].out for r in deg_done
+        if r.rid in by_rid and r.status == "finished")
 
     rows = {
         "arch": cfg.name,
@@ -178,8 +205,11 @@ def run():
         "streams_match": streams_match,
         "continuous": cont,
         "static": stat,
+        "degraded": deg,
         "speedup_tokens_per_s": (cont["tokens_per_s"]
                                  / max(stat["tokens_per_s"], 1e-9)),
+        "degraded_goodput_ratio": (deg["goodput_tokens_per_s"]
+                                   / max(cont["tokens_per_s"], 1e-9)),
     }
     emit("BENCH_serving_engine", rows)
     return rows
@@ -188,7 +218,10 @@ def run():
 def check(rows) -> bool:
     """Both paths emit identical token streams; every request finishes;
     continuous batching beats static batching on aggregate tokens/s
-    (the whole point: no head-of-line blocking, no padding rounds)."""
+    (the whole point: no head-of-line blocking, no padding rounds).
+    Under the fixed chaos seed, surviving streams stay token-exact, no
+    blocks leak, and goodput holds >= GOODPUT_FLOOR of fault-free
+    throughput (graceful degradation, not collapse)."""
     ok = rows["streams_match"]
     ok = ok and rows["continuous"]["n_requests"] == N_REQUESTS
     ok = ok and rows["continuous"]["n_tokens_out"] == \
@@ -196,6 +229,11 @@ def check(rows) -> bool:
     ok = ok and rows["continuous"]["ttft"]["p50"] > 0.0
     ok = ok and rows["continuous"]["per_token_latency"]["p50"] > 0.0
     ok = ok and rows["speedup_tokens_per_s"] > 1.0
+    deg = rows["degraded"]
+    ok = ok and deg["surviving_streams_match"]
+    ok = ok and deg["no_block_leak"]
+    ok = ok and deg["statuses"].get("finished", 0) > 0
+    ok = ok and rows["degraded_goodput_ratio"] >= GOODPUT_FLOOR
     return ok
 
 
@@ -211,6 +249,15 @@ if __name__ == "__main__":
           f"= {s['tokens_per_s']:.1f} tok/s  "
           f"(ttft p50 {s['ttft']['p50']:.2f}s, "
           f"{s['n_batches']} batches)")
+    d = rows["degraded"]
+    statuses = " ".join(f"{k}={v}" for k, v
+                        in sorted(d["statuses"].items()))
+    print(f"degraded:   {d['n_tokens_out']} tok in {d['wall_s']:.2f}s "
+          f"= {d['tokens_per_s']:.1f} tok/s, goodput "
+          f"{d['goodput_tokens_per_s']:.1f} tok/s "
+          f"({rows['degraded_goodput_ratio']:.2f}x fault-free)  "
+          f"[{statuses}] {d['n_evictions']} evictions")
     print(f"speedup: {rows['speedup_tokens_per_s']:.2f}x  "
-          f"streams_match: {rows['streams_match']}")
+          f"streams_match: {rows['streams_match']}  "
+          f"surviving_match: {d['surviving_streams_match']}")
     print("serving_engine check:", "PASS" if check(rows) else "FAIL")

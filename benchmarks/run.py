@@ -13,6 +13,8 @@ import subprocess
 import sys
 import time
 
+# serving_engine covers continuous-vs-static AND the degraded-mode
+# (chaos FaultPlan) goodput row — its check() gates both
 JOBS = ["table1", "table2", "table3", "fig1", "fig3", "kernels",
         "packed_serve", "allocator", "serving_engine"]
 

@@ -25,6 +25,13 @@
 #                               # scheduler policy, flash_decode
 #                               # (contiguous + paged), engine e2e
 #                               # traces vs greedy_decode
+#   scripts/tier1.sh faults     # fault-tolerance loop: request
+#                               # lifecycle statuses, deadlines, load
+#                               # shedding, starvation caps, the
+#                               # finite-logits guard, and the chaos
+#                               # harness (FaultPlan) e2e recovery
+#                               # traces incl. seed determinism +
+#                               # block-leak teardown checks
 #   scripts/tier1.sh allocator  # budget-allocator loop: water-filling
 #                               # solver, @auto plans, plan DSL
 #                               # round-trips, cross-variant kernel
@@ -83,6 +90,12 @@ if [ "${1:-}" = "engine" ]; then
     shift
     exec python -m pytest -q -m "not slow" \
         tests/test_serving_engine.py tests/test_flash_decode.py "$@"
+fi
+
+if [ "${1:-}" = "faults" ]; then
+    shift
+    exec python -m pytest -q -m "not slow" \
+        tests/test_serving_faults.py "$@"
 fi
 
 if [ "${1:-}" = "allocator" ]; then

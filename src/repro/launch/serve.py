@@ -170,6 +170,22 @@ def main():
                     help="--engine: requests in the synthetic trace")
     ap.add_argument("--block-size", type=int, default=16,
                     help="--engine: paged-cache tokens per block")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="--engine: per-request TTL in seconds — a "
+                         "request not finished by arrival+TTL times "
+                         "out (status 'timeout', partial output kept)")
+    ap.add_argument("--max-waiting", type=int, default=None,
+                    help="--engine: bound the waiting queue; overflow "
+                         "arrivals are load-shed (status 'shed')")
+    ap.add_argument("--shed", default="reject",
+                    choices=["reject", "evict-oldest-waiting"],
+                    help="--engine: load-shedding policy when "
+                         "--max-waiting overflows")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="--engine: run under a seeded FaultPlan "
+                         "(pool-shrink, forced NaNs, arrival burst — "
+                         "serving/faults.py) to exercise the recovery "
+                         "paths; same seed, same faults")
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
                     help="run prefill+decode under a (data, model) "
                          "device mesh, e.g. --mesh 1,4: weights are "
@@ -312,21 +328,33 @@ def main():
                                      args.gen_len + 1))
             reqs.append(Request(
                 rid=i, prompt=rng.integers(0, cfg.vocab, size=p_len),
-                max_new=n_new, arrival=t_arr))
+                max_new=n_new, arrival=t_arr,
+                deadline=(t_arr + args.deadline
+                          if args.deadline is not None else None)))
             t_arr += float(rng.exponential(0.2))
         max_len = args.prompt_len + args.gen_len
         per_req = blocks_needed(max_len, args.block_size)
         ecfg = EngineConfig(
             n_slots=args.batch, block_size=args.block_size,
             n_blocks=per_req * args.batch, max_len=max_len,
-            prefill_chunk=min(8, args.prompt_len))
+            prefill_chunk=min(8, args.prompt_len),
+            max_waiting=args.max_waiting, shed=args.shed)
         eng = Engine(cfg, params, ecfg, mesh=mesh, planner=planner)
+        faults = None
+        if args.chaos is not None:
+            from repro.serving.faults import FaultPlan
+            faults = FaultPlan.chaos(args.chaos, vocab=cfg.vocab,
+                                     n_rows=args.batch)
+            print(f"chaos: {faults!r}")
         t0 = time.monotonic()
-        eng.run(reqs, clock="wall")
-        m = summarize(reqs, time.monotonic() - t0)
-        print(f"engine: {m['n_requests']} requests, "
+        done = eng.run(reqs, clock="wall", faults=faults)
+        m = summarize(done, time.monotonic() - t0)
+        statuses = " ".join(f"{k}={v}" for k, v
+                            in sorted(m["statuses"].items()))
+        print(f"engine: {m['n_requests']} requests [{statuses}], "
               f"{m['n_tokens_out']} tokens in {m['wall_s']:.1f}s "
-              f"({m['tokens_per_s']:.1f} tok/s, "
+              f"({m['tokens_per_s']:.1f} tok/s, goodput "
+              f"{m['goodput_tokens_per_s']:.1f} tok/s, "
               f"{eng.n_steps} steps, {m['n_evictions']} evictions)")
         print(f"  ttft p50/p95/p99: {m['ttft']['p50']:.3f}/"
               f"{m['ttft']['p95']:.3f}/{m['ttft']['p99']:.3f}s")

@@ -4,22 +4,33 @@ The pieces, bottom-up:
 
   * ``paged_cache`` — the paged/block KV cache: per-layer K/V block
     pools with a per-request block table and a host-side free-list
-    allocator (``BlockAllocator``).
+    allocator (``BlockAllocator``, incl. the ``reserve``/``release``
+    fault surface).
   * ``scheduler`` — host-side request scheduler: admits variable-length
     requests mid-flight, interleaves chunked prefill with decode,
-    retires finished streams, and evicts-with-requeue on block OOM.
+    retires finished streams, evicts-with-requeue on block OOM, and
+    owns the request lifecycle (statuses, deadlines, load shedding,
+    starvation caps).
+  * ``faults`` — deterministic fault injection: a seeded ``FaultPlan``
+    of step-indexed pool-shrink / forced-NaN / burst / delay events
+    the engine consults between steps.
   * ``engine`` — the decode loop: jitted fixed-shape prefill/decode
     steps (``lm.paged_decode_step`` through the segmented layer scan
     and the ``flash_decode_paged`` kernel) driven over the scheduler's
-    dynamic request state, replaying open-loop arrival traces.
+    dynamic request state, replaying open-loop arrival traces, with a
+    per-row finite-logits guard quarantining numerically-dead streams.
 
 Entry point: ``Engine.run(requests)`` or ``python -m repro.launch.serve
---engine`` (see docs/serving_engine.md).
+--engine`` (see docs/serving_engine.md, §Failure modes & recovery).
 """
-from repro.serving.engine import Engine, EngineConfig
+from repro.serving.engine import Engine, EngineConfig, summarize
+from repro.serving.faults import BurstSpec, FaultEvent, FaultPlan
 from repro.serving.paged_cache import (BlockAllocator, PagedKVCache,
                                        init_paged_cache, paged_cache_axes)
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving.scheduler import (STATUSES, TERMINAL, Request,
+                                     Scheduler)
 
-__all__ = ["Engine", "EngineConfig", "BlockAllocator", "PagedKVCache",
-           "init_paged_cache", "paged_cache_axes", "Request", "Scheduler"]
+__all__ = ["Engine", "EngineConfig", "summarize", "BurstSpec",
+           "FaultEvent", "FaultPlan", "BlockAllocator", "PagedKVCache",
+           "init_paged_cache", "paged_cache_axes", "STATUSES",
+           "TERMINAL", "Request", "Scheduler"]

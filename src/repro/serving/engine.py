@@ -5,21 +5,32 @@ The engine owns R fixed request slots (the batch rows of every jitted
 step), a paged KV cache sized in blocks, and a ``Scheduler``. Each
 iteration of ``run``:
 
-  1. admit arrived requests into free slots (mid-flight — running
-     streams are untouched);
-  2. ask the scheduler for this step's batch: prefill rows consume up
+  1. consult the ``FaultPlan`` (if any): pool-shrink/restore, arrival
+     bursts, artificial delays, forced-NaN rows for this step;
+  2. expire past-deadline requests, then admit arrived requests into
+     free slots (mid-flight — running streams are untouched);
+  3. ask the scheduler for this step's batch: prefill rows consume up
      to ``prefill_chunk`` prompt tokens, decode rows ride along with
      one token each (Orca-style fused iteration). Pure-decode steps
      use the C=1 compilation of the same function;
-  3. run ONE jitted step: a ``lax.scan`` over the chunk's token
+  4. run ONE jitted step: a ``lax.scan`` over the chunk's token
      positions, each position a ``lm.paged_decode_step`` (the segmented
      layer scan + ``flash_decode_paged`` block-table kernel), with
      per-row validity masks — shapes never depend on which requests are
      live, so there are exactly two compilations (C and 1) for the
-     whole serving lifetime;
-  4. sample greedily at each row's last valid position, hand tokens
-     back to the scheduler (TTFT / latency bookkeeping, retirement),
-     and loop.
+     whole serving lifetime. The step also reduces a per-row
+     finite-logits flag (one ``jnp.isfinite`` all-reduce per position);
+  5. quarantine rows that went non-finite (retry once via the
+     recompute-replay eviction path, then fail them — neighbors in the
+     fused batch never see it), sample greedily at each surviving
+     row's last valid position, hand tokens back to the scheduler
+     (TTFT / latency bookkeeping, retirement), and loop.
+
+``run`` never raises on a valid trace: unservable submissions come
+back ``rejected``, deadline misses ``timeout``, ``max_steps``
+exhaustion marks everything unfinished ``timeout`` with partial
+``out``, and a permanently-stalled admission queue fails the blocked
+head with a block-accounting diagnosis instead of spinning.
 
 Open-loop traces: requests carry ``arrival`` stamps; ``clock="steps"``
 replays them against the engine-step counter (deterministic — tests),
@@ -30,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import Counter
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -38,11 +50,16 @@ import numpy as np
 
 from repro.models import lm
 from repro.models.common import ArchConfig
+from repro.serving.faults import FaultPlan
 from repro.serving.paged_cache import (PagedKVCache, init_paged_cache,
                                        paged_cache_axes, table_width)
 from repro.serving.scheduler import Request, Scheduler
 
 Array = jax.Array
+
+#: graceful backstop for pathological admit/evict cycles the stall
+#: diagnosis cannot prove permanent — finalizes instead of raising.
+IDLE_LIMIT = 100_000
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,6 +69,10 @@ class EngineConfig:
     block_size: int = 16          # tokens per block
     max_len: int = 256            # per-stream cap (prompt + gen - 1)
     prefill_chunk: int = 8        # prompt tokens per prefill step
+    max_waiting: Optional[int] = None   # waiting-queue bound (None: ∞)
+    shed: str = "reject"          # "reject" | "evict-oldest-waiting"
+    max_evictions: int = 8        # evictions before a stream starves
+    max_nan_retries: int = 1      # non-finite replays before quarantine
 
 
 class Engine:
@@ -76,7 +97,10 @@ class Engine:
         self.mesh = mesh
         self.sched = Scheduler(ecfg.n_slots, ecfg.n_blocks,
                                ecfg.block_size, ecfg.max_len,
-                               ecfg.prefill_chunk)
+                               ecfg.prefill_chunk,
+                               max_waiting=ecfg.max_waiting,
+                               shed=ecfg.shed,
+                               max_evictions=ecfg.max_evictions)
         self.paged = init_paged_cache(cfg, ecfg.n_blocks, ecfg.block_size)
         if planner is not None:
             from repro.models.common import is_axes_leaf
@@ -94,93 +118,198 @@ class Engine:
         """Compile (once per chunk size) the fused prefill/decode step:
         scan ``c`` token positions; row r is live at position t iff
         t < n_valid[r]. Returns the greedy token at each row's LAST
-        valid position (prefill completion / decode output) plus the
-        updated pool."""
+        valid position (prefill completion / decode output), the
+        updated pool, and a per-row ALL-positions-finite flag (the
+        numerical guard; ``force_nan`` poisons chosen rows — the
+        fault-injection hook, all zeros in normal serving)."""
         cfg, params = self.cfg, self.params
 
         def step(paged: PagedKVCache, tables: Array, lengths: Array,
-                 tokens: Array, n_valid: Array):
+                 tokens: Array, n_valid: Array, force_nan: Array):
             last0 = jnp.zeros((tokens.shape[0],), jnp.int32)
+            ok0 = jnp.ones((tokens.shape[0],), bool)
 
             def body(carry, xs):
-                paged, lens, last = carry
+                paged, lens, last, ok = carry
                 tok, t = xs
                 active = t < n_valid
                 logits, paged = lm.paged_decode_step(
                     cfg, params, paged, tables, lens, tok[:, None], active)
+                logits = jnp.where(force_nan[:, None, None], jnp.nan,
+                                   logits)
+                ok = ok & (jnp.all(jnp.isfinite(logits[:, 0]), axis=-1)
+                           | ~active)
                 nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
                 last = jnp.where(t == n_valid - 1, nxt, last)
-                return (paged, lens + active, last), None
+                return (paged, lens + active, last, ok), None
 
             xs = (jnp.moveaxis(tokens, 1, 0), jnp.arange(c))
-            (paged, _, last), _ = jax.lax.scan(
-                body, (paged, lengths, last0), xs)
-            return paged, last
+            (paged, _, last, ok), _ = jax.lax.scan(
+                body, (paged, lengths, last0, ok0), xs)
+            return paged, last, ok
 
         return jax.jit(step)
 
-    def _run_step(self, tokens: np.ndarray, n_valid: np.ndarray
-                  ) -> np.ndarray:
+    def _run_step(self, tokens: np.ndarray, n_valid: np.ndarray,
+                  force_nan: np.ndarray):
         c = tokens.shape[1]
         if c not in self._steps:
             self._steps[c] = self._step_fn(c)
         args = (self.paged,
                 jnp.asarray(self.sched.block_table),
                 jnp.asarray(self.sched.lengths),
-                jnp.asarray(tokens), jnp.asarray(n_valid))
+                jnp.asarray(tokens), jnp.asarray(n_valid),
+                jnp.asarray(force_nan))
         if self.mesh is not None:
             from repro.runtime.meshctx import use_mesh
             with use_mesh(self.mesh):
-                self.paged, last = self._steps[c](*args)
+                self.paged, last, ok = self._steps[c](*args)
         else:
-            self.paged, last = self._steps[c](*args)
-        return np.asarray(last)
+            self.paged, last, ok = self._steps[c](*args)
+        return np.asarray(last), np.asarray(ok)
+
+    # -- fault plumbing ----------------------------------------------------
+
+    def _fire_faults(self, faults: Optional[FaultPlan], fired: set,
+                     now: float, injected: List[Request]) -> None:
+        """Apply every not-yet-fired plan event due at/by this step."""
+        if faults is None:
+            return
+        for i, ev in enumerate(faults.events):
+            if i in fired or ev.step > self.n_steps:
+                continue
+            fired.add(i)
+            if ev.kind == "pool_shrink":
+                self.sched.alloc.reserve(ev.n_blocks)
+            elif ev.kind == "pool_restore":
+                self.sched.alloc.release(
+                    ev.n_blocks if ev.n_blocks else None)
+            elif ev.kind == "burst":
+                for spec in ev.bursts:
+                    req = spec.materialize(now)
+                    self.sched.submit(req)
+                    injected.append(req)
+            elif ev.kind == "delay":
+                time.sleep(ev.delay_s)
+            # "nan" events are consumed by nan_rows() at step-run time
+
+    def _quarantine_nonfinite(self, n_valid: np.ndarray, ok: np.ndarray,
+                              now: float) -> None:
+        """Handle rows whose logits went non-finite this step: the
+        garbage token is never committed; the row is replayed once via
+        the recompute eviction path, then failed. Other rows in the
+        fused batch are untouched."""
+        for row in [r for r in list(self.sched.slots)
+                    if n_valid[r] and not ok[r]]:
+            req = self.sched.slots[row].req
+            if req.n_nan_retries < self.ecfg.max_nan_retries:
+                req.n_nan_retries += 1
+                self.sched.evict(row)
+            else:
+                self.sched.fail(row, now=now, error=(
+                    f"non-finite logits at step {self.n_steps} "
+                    f"(after {req.n_nan_retries} replay(s))"))
 
     # -- serving loop ------------------------------------------------------
 
+    def _finalize_unfinished(self, status: str, error: str,
+                             now: float) -> None:
+        """Graceful shutdown: everything still live gets ``status``
+        with partial ``out`` — nothing is discarded, nothing raises."""
+        for row in list(self.sched.slots):
+            req = self.sched._release(row)
+            self.sched._finalize(req, status, error=error, now=now)
+        for q in (self.sched.waiting, self.sched.pending):
+            while q:
+                self.sched._finalize(q.pop(0), status, error=error,
+                                     now=now)
+
     def run(self, requests: Sequence[Request], clock: str = "steps",
-            max_steps: Optional[int] = None) -> List[Request]:
+            max_steps: Optional[int] = None,
+            faults: Optional[FaultPlan] = None) -> List[Request]:
         """Serve an open-loop trace to completion. Returns the requests
-        (same objects) with ``out``/``ttft``/``token_times``/``finish``
-        populated; arrival order need not be sorted."""
+        (same objects) with ``status``/``out``/``ttft``/``token_times``
+        /``finish`` populated — plus any burst requests ``faults``
+        injected — and never raises on a valid trace: failures are
+        statuses, not exceptions. Arrival order need not be sorted."""
         if clock not in ("steps", "wall"):
             raise ValueError(clock)
         for req in requests:
-            self.sched.submit(req)
+            self.sched.submit(req)       # unservable -> status rejected
+        injected: List[Request] = []
+        fired: set = set()
         t0 = time.monotonic()
         idle_guard = 0
         while self.sched.has_work():
             now = (float(self.n_steps) if clock == "steps"
                    else time.monotonic() - t0)
+            self._fire_faults(faults, fired, now, injected)
+            self.sched.expire(now)
             self.sched.admit(now)
             plan = self.sched.plan_step()
             if plan is None:
-                # nothing runnable: wait for the next arrival
+                if not self.sched.has_work():
+                    break                # expiry drained the trace
                 nxt = self.sched.next_arrival()
-                if nxt is None and not self.sched.waiting:
-                    raise RuntimeError("scheduler stuck with no work")
+                idle_guard += 1
+                heal = (faults is not None
+                        and faults.has_restore_after(self.n_steps))
+                if (heal and clock == "wall" and nxt is None
+                        and not self.sched.slots):
+                    # dead idle on the wall clock never advances
+                    # n_steps, so a step-indexed restore would never
+                    # fire — fast-forward it instead of sleeping on it
+                    for i, ev in enumerate(faults.events):
+                        if ev.kind == "pool_restore" and i not in fired:
+                            fired.add(i)
+                            self.sched.alloc.release(
+                                ev.n_blocks if ev.n_blocks else None)
+                    continue
+                if (nxt is None and not self.sched.slots
+                        and self.sched.waiting and not heal):
+                    # permanent stall: nothing runs, nothing arrives,
+                    # no scheduled restore — fail the blocked head with
+                    # the block accounting, keep serving the rest
+                    diag = self.sched.diagnose_stall() or (
+                        "admission stalled with free blocks")
+                    self.sched._finalize(self.sched.waiting.pop(0),
+                                         "failed", error=diag, now=now)
+                    continue
+                if idle_guard > IDLE_LIMIT:
+                    diag = self.sched.diagnose_stall()
+                    self._finalize_unfinished(
+                        "failed", f"idle-loop livelock after "
+                        f"{IDLE_LIMIT} iterations"
+                        + (f": {diag}" if diag else ""), now)
+                    break
                 if clock == "steps":
                     self.n_steps += 1
                 else:
                     time.sleep(min(1e-3, max(nxt - now, 0.0) if nxt
                                    else 1e-3))
-                idle_guard += 1
-                if idle_guard > 100_000:
-                    raise RuntimeError("engine idle-looped 100k steps")
                 continue
             idle_guard = 0
             tokens, n_valid, _ = plan
-            last = self._run_step(tokens, n_valid)
+            force_nan = np.zeros((self.sched.n_slots,), bool)
+            if faults is not None:
+                for row in faults.nan_rows(self.n_steps):
+                    force_nan[row] = True
+            last, ok = self._run_step(tokens, n_valid, force_nan)
             self.n_steps += 1
             emit_t = (float(self.n_steps) if clock == "steps"
                       else time.monotonic() - t0)
+            self._quarantine_nonfinite(n_valid, ok, emit_t)
             self.sched.commit_step(n_valid, last, emit_t)
             if max_steps is not None and self.n_steps >= max_steps:
-                raise RuntimeError(
-                    f"engine exceeded max_steps={max_steps} with "
-                    f"{len(self.sched.slots)} running / "
-                    f"{len(self.sched.waiting)} waiting")
-        return list(requests)
+                self._finalize_unfinished(
+                    "timeout", f"max_steps={max_steps} exhausted",
+                    emit_t)
+                break
+        # faults are scoped to the run: any still-reserved blocks come
+        # back so the pool-leak invariant (n_free == n_blocks once all
+        # streams are terminal) holds at trace end
+        self.sched.alloc.release()
+        return list(requests) + injected
 
 
 # ----------------------------------------------------------------------
@@ -189,14 +318,18 @@ class Engine:
 
 def summarize(requests: Sequence[Request], wall_s: float) -> dict:
     """Aggregate serving metrics over a completed trace: TTFT and
-    inter-token latency percentiles (units = the run's clock), plus
-    aggregate generated tokens/s."""
+    inter-token latency percentiles (units = the run's clock),
+    aggregate generated tokens/s, per-status counts, and goodput —
+    tokens/s counting only tokens of requests that FINISHED (partial
+    output of timed-out/failed streams is waste, not goods)."""
     ttfts = [r.ttft for r in requests if r.ttft is not None]
     inter: List[float] = []
     for r in requests:
         ts = r.token_times
         inter.extend(b - a for a, b in zip(ts, ts[1:]))
     n_tok = sum(r.n_generated for r in requests)
+    n_good = sum(r.n_generated for r in requests
+                 if r.status == "finished")
 
     def pct(xs, q):
         return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
@@ -206,6 +339,8 @@ def summarize(requests: Sequence[Request], wall_s: float) -> dict:
         "n_tokens_out": n_tok,
         "wall_s": wall_s,
         "tokens_per_s": n_tok / wall_s if wall_s > 0 else 0.0,
+        "goodput_tokens_per_s": n_good / wall_s if wall_s > 0 else 0.0,
+        "statuses": dict(Counter(r.status for r in requests)),
         "ttft": {"p50": pct(ttfts, 50), "p95": pct(ttfts, 95),
                  "p99": pct(ttfts, 99)},
         "per_token_latency": {"p50": pct(inter, 50), "p95": pct(inter, 95),

@@ -104,15 +104,47 @@ class BlockAllocator:
 
     LIFO reuse keeps recently-freed blocks hot. The allocator is
     all-or-nothing: ``alloc(n)`` either returns n block ids or None
-    (caller decides to evict/queue) — no partial grants to unwind."""
+    (caller decides to evict/queue) — no partial grants to unwind.
+
+    ``reserve(n)``/``release()`` take free blocks out of circulation
+    and put them back — the fault-injection surface for allocator
+    pressure (``serving/faults.py`` pool-shrink events). Reserved
+    blocks are neither free nor allocated; ``release()`` must be
+    called before the end-of-trace leak check ``n_free == n_blocks``
+    holds."""
 
     def __init__(self, n_blocks: int):
         self.n_blocks = n_blocks
         self._free: List[int] = list(range(n_blocks - 1, -1, -1))
+        self._reserved: List[int] = []
 
     @property
     def n_free(self) -> int:
         return len(self._free)
+
+    @property
+    def n_reserved(self) -> int:
+        return len(self._reserved)
+
+    def reserve(self, n: int) -> int:
+        """Pull up to ``n`` free blocks out of circulation (pool-shrink
+        fault). Returns how many were actually reserved — never more
+        than are free, so live streams keep their blocks."""
+        if n < 0:
+            raise ValueError(f"reserve({n})")
+        take = min(n, len(self._free))
+        self._reserved.extend(self._free[len(self._free) - take:])
+        del self._free[len(self._free) - take:]
+        return take
+
+    def release(self, n: Optional[int] = None) -> int:
+        """Return ``n`` (default: all) reserved blocks to the free
+        list. Returns how many came back."""
+        give = len(self._reserved) if n is None else min(
+            n, len(self._reserved))
+        self._free.extend(self._reserved[len(self._reserved) - give:])
+        del self._reserved[len(self._reserved) - give:]
+        return give
 
     def alloc(self, n: int) -> Optional[List[int]]:
         if n < 0:

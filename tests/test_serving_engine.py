@@ -85,12 +85,17 @@ def test_scheduler_admits_in_arrival_order():
 
 
 def test_scheduler_rejects_oversized_request():
+    """Unservable requests reject-with-status instead of raising: one
+    bad request must not kill the trace."""
     s = Scheduler(n_slots=1, n_blocks=4, block_size=4, max_len=16)
-    with pytest.raises(ValueError):
-        s.submit(_req(0, 14, max_new=8))     # 21 cached > max_len
-    with pytest.raises(ValueError):
-        Scheduler(n_slots=1, n_blocks=2, block_size=4,
-                  max_len=32).submit(_req(1, 12, max_new=8))
+    r = _req(0, 14, max_new=8)               # 21 cached > max_len
+    assert s.submit(r) is False
+    assert r.status == "rejected" and "max_len" in r.error
+    assert not s.pending and not s.waiting
+    s2 = Scheduler(n_slots=1, n_blocks=2, block_size=4, max_len=32)
+    r2 = _req(1, 12, max_new=8)
+    assert s2.submit(r2) is False
+    assert r2.status == "rejected" and "cannot ever run" in r2.error
 
 
 def test_scheduler_retire_frees_blocks_and_slot():
@@ -200,6 +205,7 @@ def test_engine_mixed_arrival_trace_matches_greedy(dense_setup):
                  EngineConfig(n_slots=3, n_blocks=32, block_size=4,
                               max_len=64, prefill_chunk=4))
     done = eng.run(reqs, clock="steps", max_steps=500)
+    assert all(r.status == "finished" for r in done)
     assert all(r.n_generated == r.max_new for r in done)
     assert all(r.ttft is not None and r.finish is not None for r in done)
     # staggered arrivals really were admitted at different times

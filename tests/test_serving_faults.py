@@ -1,0 +1,422 @@
+"""Fault-tolerant serving: request lifecycle statuses, deadlines,
+load shedding, starvation caps, the per-row finite-logits guard, and
+the deterministic fault-injection harness (``serving/faults.py``).
+
+The e2e invariant everywhere: under injected faults, SURVIVING streams
+stay token-exact vs per-request ``greedy_decode`` (greedy determinism
+makes every recompute-replay verifiable), quarantined/expired streams
+keep a valid greedy PREFIX as partial output, no KV blocks leak, and
+``Engine.run`` never raises on a valid trace — failures are statuses.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.launch.serve import greedy_decode
+from repro.models import lm
+from repro.serving import (BlockAllocator, Engine, EngineConfig,
+                           FaultEvent, FaultPlan, Request, Scheduler,
+                           summarize)
+from repro.serving.faults import BURST_RID_BASE, BurstSpec
+
+
+# ----------------------------------------------------------------------
+# Allocator fault surface (reserve / release) + leak invariants
+# ----------------------------------------------------------------------
+
+def test_allocator_reserve_caps_at_free():
+    a = BlockAllocator(8)
+    held = a.alloc(5)
+    assert a.reserve(10) == 3            # only 3 were free
+    assert a.n_free == 0 and a.n_reserved == 3
+    assert a.alloc(1) is None            # reserved blocks aren't free
+    a.free(held)
+    assert a.release() == 3
+    assert a.n_free == 8 and a.n_reserved == 0
+
+
+def test_allocator_reserve_release_partial():
+    a = BlockAllocator(6)
+    a.reserve(4)
+    assert a.release(2) == 2
+    assert a.n_free == 4 and a.n_reserved == 2
+    a.release()
+    assert a.n_free == 6
+
+
+def test_allocator_double_free_raises_after_reserve_cycle():
+    a = BlockAllocator(4)
+    ids = a.alloc(2)
+    a.reserve(2)
+    a.free(ids)
+    with pytest.raises(ValueError):
+        a.free(ids)
+    a.release()
+    assert a.n_free == 4
+
+
+# ----------------------------------------------------------------------
+# Scheduler lifecycle units (no model)
+# ----------------------------------------------------------------------
+
+def _req(rid, p_len, max_new=4, arrival=0.0, deadline=None):
+    return Request(rid=rid, prompt=np.full(p_len, rid + 1, np.int32),
+                   max_new=max_new, arrival=arrival, deadline=deadline)
+
+
+def test_status_transitions_through_lifecycle():
+    s = Scheduler(n_slots=1, n_blocks=8, block_size=4, max_len=32)
+    r = _req(0, 6, max_new=1)
+    assert s.submit(r) is True and r.status == "queued"
+    s.admit(0.0)
+    assert r.status == "running"
+    _, n_valid, _ = s.plan_step()
+    s.commit_step(n_valid, np.array([42]), now=1.0)
+    assert r.status == "finished" and r.terminal and r.finish == 1.0
+
+
+def test_submit_keeps_pending_sorted_by_arrival():
+    """bisect.insort admission queue: out-of-order submissions land
+    sorted; equal arrivals stay FIFO (insort is right-biased)."""
+    s = Scheduler(n_slots=1, n_blocks=8, block_size=4, max_len=32)
+    for rid, t in [(0, 5.0), (1, 1.0), (2, 3.0), (3, 1.0), (4, 0.5)]:
+        s.submit(_req(rid, 4, arrival=t))
+    assert [r.rid for r in s.pending] == [4, 1, 3, 2, 0]
+    assert s.next_arrival() == 0.5
+
+
+def test_deadline_expires_waiting_and_running():
+    s = Scheduler(n_slots=1, n_blocks=16, block_size=4, max_len=32)
+    run = _req(0, 6, max_new=8, arrival=0.0, deadline=5.0)
+    wait = _req(1, 6, max_new=8, arrival=0.0, deadline=3.0)
+    s.submit(run), s.submit(wait)
+    s.admit(0.0)
+    _, n_valid, _ = s.plan_step()
+    s.commit_step(n_valid, np.array([7]), now=1.0)
+    assert run.status == "running" and run.out == [7]
+    assert s.expire(2.0) == []           # nobody late yet
+    timed = s.expire(6.0)                # both deadlines passed
+    assert sorted(r.rid for r in timed) == [0, 1]
+    assert run.status == wait.status == "timeout"
+    assert run.out == [7]                # partial output survives
+    assert not s.slots and not s.waiting
+    assert s.alloc.n_free == 16          # running row freed its blocks
+
+
+def test_eviction_cap_starves_instead_of_thrashing():
+    s = Scheduler(n_slots=1, n_blocks=8, block_size=4, max_len=32,
+                  max_evictions=1)
+    r = _req(0, 6, max_new=4)
+    s.submit(r)
+    s.admit(0.0)
+    s.plan_step()
+    s.evict(0)                           # within budget: requeued
+    assert r.status == "queued" and r.n_evictions == 1
+    assert s.waiting == [r]
+    s.admit(1.0)
+    s.plan_step()
+    s.evict(0)                           # over budget: starved out
+    assert r.status == "failed" and "starved" in r.error
+    assert not s.waiting and s.alloc.n_free == 8
+
+
+def test_load_shed_reject_policy():
+    s = Scheduler(n_slots=1, n_blocks=16, block_size=4, max_len=32,
+                  max_waiting=1, shed="reject")
+    a, b, c = _req(0, 4), _req(1, 4), _req(2, 4)
+    for r in (a, b, c):
+        s.submit(r)
+    s.admit(0.0)                         # a runs, b waits, c sheds
+    assert a.status == "running"
+    assert b.status == "queued" and s.waiting == [b]
+    assert c.status == "shed" and "full" in c.error
+
+
+def test_load_shed_evict_oldest_waiting_policy():
+    s = Scheduler(n_slots=1, n_blocks=16, block_size=4, max_len=32,
+                  max_waiting=1, shed="evict-oldest-waiting")
+    a, b, c = _req(0, 4), _req(1, 4), _req(2, 4)
+    for r in (a, b, c):
+        s.submit(r)
+    s.admit(0.0)                         # a runs, b displaced by c
+    assert a.status == "running"
+    assert b.status == "shed" and "displaced" in b.error
+    assert s.waiting == [c] and c.status == "queued"
+
+
+def test_diagnose_stall_names_request_and_blocks():
+    s = Scheduler(n_slots=1, n_blocks=8, block_size=4, max_len=32)
+    s.submit(_req(7, 10, max_new=4))
+    s.alloc.reserve(8)
+    s.admit(0.0)                         # watermark blocks admission
+    diag = s.diagnose_stall()
+    assert "rid=7" in diag and "needs 3 blocks" in diag
+    assert "0/8 free" in diag and "8 reserved" in diag
+    s.alloc.release()
+    assert s.diagnose_stall() is None
+
+
+# ----------------------------------------------------------------------
+# FaultPlan units
+# ----------------------------------------------------------------------
+
+def test_fault_plan_is_seed_deterministic():
+    a = FaultPlan.chaos(seed=11, vocab=128, n_rows=4)
+    b = FaultPlan.chaos(seed=11, vocab=128, n_rows=4)
+    assert a.events == b.events
+    c = FaultPlan.chaos(seed=12, vocab=128, n_rows=4)
+    assert a.events != c.events
+    # every fault kind is represented in the canned mix
+    kinds = {ev.kind for ev in a.events}
+    assert {"nan", "pool_shrink", "pool_restore", "burst"} <= kinds
+
+
+def test_fault_plan_lookup_and_validation():
+    plan = FaultPlan([
+        FaultEvent(step=3, kind="nan", rows=(0, 2)),
+        FaultEvent(step=3, kind="nan", rows=(1,)),
+        FaultEvent(step=5, kind="pool_restore"),
+    ])
+    assert plan.nan_rows(3) == (0, 2, 1)
+    assert plan.nan_rows(4) == ()
+    assert plan.has_restore_after(4) and not plan.has_restore_after(5)
+    assert plan.max_step == 5
+    with pytest.raises(ValueError):
+        FaultEvent(step=1, kind="meteor-strike")
+
+
+def test_burst_spec_materializes_fresh_requests():
+    spec = BurstSpec(rid=BURST_RID_BASE, prompt=(1, 2, 3), max_new=2,
+                     ttl=4.0)
+    r1, r2 = spec.materialize(10.0), spec.materialize(10.0)
+    assert r1 is not r2                  # replays never share state
+    assert r1.arrival == 10.0 and r1.deadline == 14.0
+    np.testing.assert_array_equal(r1.prompt, [1, 2, 3])
+
+
+# ----------------------------------------------------------------------
+# End-to-end chaos traces (model involved). Teardown asserts the block
+# pool leaked nothing — the allocator invariant for EVERY trace.
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = configs.get("llama2_7b", smoke=True).with_(dtype=jnp.float32)
+    params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture
+def make_engine():
+    """Engine factory whose teardown runs the leak check on every
+    engine a test built: all streams terminal, nothing reserved, and
+    every block back on the free list."""
+    engines = []
+
+    def factory(cfg, params, ecfg):
+        eng = Engine(cfg, params, ecfg)
+        engines.append(eng)
+        return eng
+
+    yield factory
+    for eng in engines:
+        assert not eng.sched.slots, "slots still occupied after trace"
+        assert eng.sched.alloc.n_reserved == 0, "reserved blocks leaked"
+        assert eng.sched.alloc.n_free == eng.ecfg.n_blocks, "block leak"
+
+
+def _trace(cfg, specs, seed=0, deadlines=None):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, size=p,
+                                        dtype=np.int64).astype(np.int32),
+                    max_new=n, arrival=a,
+                    deadline=None if deadlines is None else deadlines[i])
+            for i, (p, n, a) in enumerate(specs)]
+
+
+def _greedy(cfg, params, req):
+    return np.asarray(greedy_decode(
+        cfg, params, jnp.asarray(req.prompt)[None, :], req.max_new))[0]
+
+
+def _assert_exact(cfg, params, reqs):
+    for r in reqs:
+        want = _greedy(cfg, params, r)
+        assert np.array_equal(np.asarray(r.out, np.int32), want), (
+            f"rid={r.rid}: engine {r.out} != greedy {list(want)}")
+
+
+def _assert_prefix(cfg, params, req):
+    want = _greedy(cfg, params, req)
+    got = np.asarray(req.out, np.int32)
+    assert np.array_equal(got, want[:len(got)]), (
+        f"rid={req.rid}: partial {req.out} not a greedy prefix")
+
+
+def test_rejected_request_does_not_kill_trace(dense_setup, make_engine):
+    cfg, params = dense_setup
+    reqs = _trace(cfg, [(8, 4, 0.0), (60, 4, 0.0), (6, 5, 1.0)])
+    eng = make_engine(cfg, params, EngineConfig(
+        n_slots=2, n_blocks=16, block_size=4, max_len=32,
+        prefill_chunk=4))
+    done = eng.run(reqs, clock="steps", max_steps=500)
+    by_rid = {r.rid: r for r in done}
+    assert by_rid[1].status == "rejected" and by_rid[1].out == []
+    assert by_rid[0].status == by_rid[2].status == "finished"
+    _assert_exact(cfg, params, [by_rid[0], by_rid[2]])
+
+
+def test_deadline_timeout_keeps_greedy_prefix(dense_setup, make_engine):
+    cfg, params = dense_setup
+    reqs = _trace(cfg, [(6, 6, 0.0), (12, 10, 0.0)],
+                  deadlines=[None, 5.0])
+    eng = make_engine(cfg, params, EngineConfig(
+        n_slots=2, n_blocks=16, block_size=4, max_len=32,
+        prefill_chunk=4))
+    done = eng.run(reqs, clock="steps", max_steps=500)
+    a, b = done[0], done[1]
+    assert a.status == "finished"
+    _assert_exact(cfg, params, [a])
+    assert b.status == "timeout" and "deadline" in b.error
+    assert 0 < b.n_generated < b.max_new
+    _assert_prefix(cfg, params, b)
+
+
+def test_max_steps_finalizes_instead_of_raising(dense_setup, make_engine):
+    cfg, params = dense_setup
+    reqs = _trace(cfg, [(6, 40, 0.0), (6, 40, 3.0), (6, 40, 100.0)])
+    eng = make_engine(cfg, params, EngineConfig(
+        n_slots=1, n_blocks=16, block_size=4, max_len=64,
+        prefill_chunk=4))
+    done = eng.run(reqs, clock="steps", max_steps=8)
+    assert all(r.status == "timeout" for r in done)
+    assert all("max_steps" in r.error for r in done)
+    running = done[0]                    # was mid-decode when cut off
+    assert 0 < running.n_generated < running.max_new
+    _assert_prefix(cfg, params, running)
+
+
+def test_forced_nan_retries_once_token_exact(dense_setup, make_engine):
+    """One injected non-finite step: the victim replays through the
+    recompute eviction path and every stream still matches greedy."""
+    cfg, params = dense_setup
+    reqs = _trace(cfg, [(6, 8, 0.0), (7, 8, 0.0)], seed=1)
+    eng = make_engine(cfg, params, EngineConfig(
+        n_slots=2, n_blocks=16, block_size=4, max_len=32,
+        prefill_chunk=4))
+    faults = FaultPlan([FaultEvent(step=4, kind="nan", rows=(0,))])
+    done = eng.run(reqs, clock="steps", max_steps=500, faults=faults)
+    assert all(r.status == "finished" for r in done)
+    assert sum(r.n_nan_retries for r in done) == 1
+    assert sum(r.n_evictions for r in done) >= 1   # the retry path
+    _assert_exact(cfg, params, done)
+
+
+def test_persistent_nan_quarantines_victim_only(dense_setup, make_engine):
+    """A row that stays non-finite after its replay is quarantined as
+    failed with a greedy-prefix partial output; its fused-batch
+    neighbor never notices."""
+    cfg, params = dense_setup
+    reqs = _trace(cfg, [(6, 10, 0.0), (7, 10, 0.0)], seed=2)
+    eng = make_engine(cfg, params, EngineConfig(
+        n_slots=2, n_blocks=24, block_size=4, max_len=32,
+        prefill_chunk=4))
+    faults = FaultPlan([FaultEvent(step=s, kind="nan", rows=(0,))
+                        for s in range(5, 40)])
+    done = eng.run(reqs, clock="steps", max_steps=500, faults=faults)
+    victim, neighbor = done[0], done[1]
+    assert victim.status == "failed" and "non-finite" in victim.error
+    assert victim.n_nan_retries == 1     # retried once, then failed
+    assert 0 < victim.n_generated < victim.max_new
+    _assert_prefix(cfg, params, victim)
+    assert neighbor.status == "finished"
+    _assert_exact(cfg, params, [neighbor])
+
+
+def test_pool_shrink_evicts_and_recovers_exact(dense_setup, make_engine):
+    """Allocator-pressure fault: a mid-trace pool shrink forces the
+    evict-with-recompute path; every stream still finishes token-exact
+    and the reserved blocks come back."""
+    cfg, params = dense_setup
+    reqs = _trace(cfg, [(8, 8, 0.0), (8, 8, 0.0)], seed=3)
+    eng = make_engine(cfg, params, EngineConfig(
+        n_slots=2, n_blocks=8, block_size=4, max_len=16,
+        prefill_chunk=4))
+    faults = FaultPlan([
+        FaultEvent(step=3, kind="pool_shrink", n_blocks=2),
+        FaultEvent(step=60, kind="pool_restore"),
+    ])
+    done = eng.run(reqs, clock="steps", max_steps=1000, faults=faults)
+    assert all(r.status == "finished" for r in done)
+    assert eng.sched.n_evictions > 0
+    _assert_exact(cfg, params, done)
+
+
+def test_burst_injection_load_sheds(dense_setup, make_engine):
+    """An injected arrival burst overflows the bounded waiting queue:
+    overflow is shed with a status, admitted streams stay exact, and
+    the burst requests come back in the returned trace."""
+    cfg, params = dense_setup
+    reqs = _trace(cfg, [(6, 6, 0.0), (6, 6, 0.0)], seed=4)
+    eng = make_engine(cfg, params, EngineConfig(
+        n_slots=1, n_blocks=16, block_size=4, max_len=32,
+        prefill_chunk=4, max_waiting=1, shed="reject"))
+    rng = np.random.default_rng(5)
+    specs = tuple(BurstSpec(
+        rid=BURST_RID_BASE + i,
+        prompt=tuple(int(t) for t in rng.integers(0, cfg.vocab, size=5)),
+        max_new=3) for i in range(2))
+    faults = FaultPlan([FaultEvent(step=2, kind="burst", bursts=specs)])
+    done = eng.run(reqs, clock="steps", max_steps=800, faults=faults)
+    assert len(done) == 4                # originals + injected burst
+    statuses = {r.rid: r.status for r in done}
+    assert statuses[0] == statuses[1] == "finished"
+    assert "shed" in {statuses[BURST_RID_BASE + i] for i in range(2)}
+    _assert_exact(cfg, params,
+                  [r for r in done if r.status == "finished"])
+
+
+def test_permanent_stall_fails_head_with_diagnosis(dense_setup,
+                                                   make_engine):
+    """Nothing running, nothing arriving, head can't fit: the engine
+    diagnoses immediately (request + block accounting in the error)
+    instead of idle-spinning into a RuntimeError."""
+    cfg, params = dense_setup
+    reqs = _trace(cfg, [(8, 4, 0.0)])
+    eng = make_engine(cfg, params, EngineConfig(
+        n_slots=1, n_blocks=8, block_size=4, max_len=16,
+        prefill_chunk=4))
+    faults = FaultPlan([FaultEvent(step=0, kind="pool_shrink",
+                                   n_blocks=8)])    # no restore: stuck
+    done = eng.run(reqs, clock="steps", max_steps=100, faults=faults)
+    r = done[0]
+    assert r.status == "failed"
+    assert "rid=0" in r.error and "blocked" in r.error
+    assert "0/8 free" in r.error
+    assert eng.n_steps < 50              # diagnosed, not idle-spun
+
+
+def test_chaos_seed_reproduces_byte_identical_runs(dense_setup,
+                                                   make_engine):
+    """The determinism contract: same trace + same FaultPlan seed =>
+    byte-identical per-request out/statuses across two fresh runs."""
+    cfg, params = dense_setup
+    specs = [(9, 10, 0.0), (12, 12, 1.0), (7, 12, 2.0), (10, 9, 3.0)]
+    faults = FaultPlan.chaos(seed=7, vocab=cfg.vocab, n_rows=2,
+                             horizon=24, burst_prompt=5, burst_new=2)
+    runs = []
+    for _ in range(2):
+        eng = make_engine(cfg, params, EngineConfig(
+            n_slots=2, n_blocks=12, block_size=4, max_len=32,
+            prefill_chunk=4))
+        done = eng.run(_trace(cfg, specs, seed=6), clock="steps",
+                       max_steps=2000, faults=faults)
+        runs.append({r.rid: (r.status, tuple(r.out), r.n_evictions,
+                             r.error) for r in done})
+    assert runs[0] == runs[1]
+    assert len(runs[0]) > len(specs)     # burst requests are in there
+    # and the chaos run still finishes real work
+    assert any(s[0] == "finished" for s in runs[0].values())
